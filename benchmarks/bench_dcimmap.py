@@ -1,0 +1,31 @@
+"""Architecture -> DCIM provisioning benchmark: runs the explorer-driven
+mapper for every assigned architecture (the framework-level integration
+of the paper's compiler)."""
+from __future__ import annotations
+
+import time
+
+from repro import configs
+from repro.core import nsga2
+from repro.dcimmap import plan
+
+from .common import emit
+
+CFG = nsga2.NSGA2Config(pop_size=64, generations=32)
+
+
+def main():
+    for arch in configs.ARCH_NAMES:
+        t0 = time.perf_counter()
+        p = plan(arch, precision="int8", w_store=65536, cfg_nsga=CFG)
+        dt = (time.perf_counter() - t0) * 1e6
+        emit(
+            f"dcimmap.{arch}", dt,
+            f"macros={p.n_macros} area_mm2={p.total_area_mm2:.0f}"
+            f" power_W={p.total_power_W:.1f} tok_s={p.tokens_per_s:.1f}"
+            f" unmappable={len(p.unmappable)}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+On CPU these measure the XLA lowering of the kernel body; on TPU the same
+entry points run the compiled Pallas kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit, time_fn
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # pareto_rank: P x P dominance
+    for P in (128, 512, 1024):
+        F = jnp.asarray(rng.normal(size=(P, 4)).astype(np.float32))
+        us_k = time_fn(ops.dominance_matrix, F)
+        us_r = time_fn(ref.dominance_matrix_ref, F)
+        emit(f"pareto_rank.P{P}", us_k,
+             f"ref_us={us_r:.1f} pairs_per_s={P * P / us_k * 1e6:.3g}")
+
+    # dcim_mvm: bit-serial exact int matmul
+    for M, K, N in ((128, 512, 128), (256, 2048, 256)):
+        x = jnp.asarray(rng.integers(-128, 128, (M, K)).astype(np.int32))
+        w = jnp.asarray(rng.integers(-128, 128, (K, N)).astype(np.int32))
+        us_k = time_fn(lambda a, b: ops.dcim_mvm(a, b, B_x=8, B_w=8, k=4), x, w)
+        us_r = time_fn(ref.dcim_mvm_ref, x, w)
+        macs = M * K * N
+        emit(f"dcim_mvm.{M}x{K}x{N}", us_k,
+             f"ref_us={us_r:.1f} gmacs_per_s={macs / us_k * 1e-3:.2f}")
+
+    # fp_prealign
+    for shape in ((64, 16, 64), (256, 32, 128)):
+        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+        us_k = time_fn(
+            lambda a: ops._pre.fp_prealign_pallas(a, B_M=8), x)
+        us_r = time_fn(lambda a: ref.fp_prealign_ref(a, B_M=8), x)
+        emit(f"fp_prealign.{'x'.join(map(str, shape))}", us_k,
+             f"ref_us={us_r:.1f}")
+
+    # composed FP-DCIM matmul vs f32 matmul accuracy+speed
+    x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    us_k = time_fn(lambda a, b: ops.dcim_fp_matmul(a, b, H=64, B_M=8, B_w=8, k=4), x, w)
+    got = np.asarray(ops.dcim_fp_matmul(x, w, H=64, B_M=8, B_w=8, k=4))
+    want = np.asarray(ref.fp_matmul_f32_ref(x, w))
+    rel = np.median(np.abs(got - want) / np.maximum(np.abs(want), 1.0))
+    emit("dcim_fp_matmul.64x256x64", us_k, f"median_rel_err={rel:.2e}")
+
+
+if __name__ == "__main__":
+    main()

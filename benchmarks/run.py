@@ -1,0 +1,21 @@
+"""Benchmark runner: one section per paper table/figure + kernels +
+framework integration.  Emits ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from . import bench_calibration, bench_dcimmap, bench_kernels, bench_paper
+
+    print("# --- calibration (anchors + held-out validation) ---")
+    bench_calibration.main()
+    print("# --- paper figures (Fig. 6/7/8, Table I, DSE budget) ---")
+    bench_paper.main()
+    print("# --- Pallas kernels ---")
+    bench_kernels.main()
+    print("# --- arch -> DCIM provisioning (framework integration) ---")
+    bench_dcimmap.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Provision DCIM macros for real LM architectures + execute a model
+layer through the generated macro's numerics.
+
+    PYTHONPATH=src python examples/dcim_for_llm.py
+
+Shows the framework-level integration of SEGA-DCIM: the explorer sizes
+macros for an architecture's GEMM workloads, and the bit-serial kernel
+executes a real projection layer with INT8 DCIM numerics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nsga2 import NSGA2Config
+from repro.core.precision import get as get_precision
+from repro.dcimmap import extract, plan
+from repro import configs
+from repro.sim import DCIMMacroSim
+
+CFG = NSGA2Config(pop_size=64, generations=32)
+
+
+def main():
+    print("=== GEMM workloads per architecture ===")
+    for arch in ("qwen2.5-3b", "falcon-mamba-7b", "deepseek-v3-671b"):
+        wl = extract(configs.get_config(arch))
+        print(f"  {arch}: {len(wl.gemms)} GEMM classes, "
+              f"{wl.total_weights() / 1e9:.2f}B weights, "
+              f"{wl.macs_per_token() / 1e9:.2f} GMAC/token")
+        for u in wl.unmappable:
+            print(f"     not DCIM-mappable: {u}")
+
+    print("\n=== INT8 macro provisioning (explorer-driven) ===")
+    for arch in ("qwen2.5-3b", "phi4-mini-3.8b"):
+        p = plan(arch, precision="int8", w_store=65536, cfg_nsga=CFG)
+        print("  " + p.summary())
+        print(f"     chosen macro: {p.point.summary()}")
+
+    print("\n=== Execute a real projection through DCIM numerics ===")
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    from repro.models import lm
+
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    w = params["blocks"][0]["mixer"]["wq"]["w"][0]          # (D, H*hd)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, w.shape[0]))
+    sim = DCIMMacroSim(get_precision("int8"), N=64, H=64, L=8, k=4)
+    y_dcim = sim.mvm(x, w)
+    y_ref = x @ w
+    rel = np.median(
+        np.abs(np.asarray(y_dcim - y_ref)) / np.maximum(np.abs(np.asarray(y_ref)), 1e-3)
+    )
+    acct = sim.account(8, w.shape[0], w.shape[1])
+    print(f"  wq through INT8 DCIM: median rel err {rel:.3%} "
+          f"(quantization-only; bit-serial MAC is exact)")
+    print(f"  macro accounting: {acct['cycles']} cycles, "
+          f"{acct['latency_us']:.1f} us, {acct['energy_uJ']:.2f} uJ")
+
+
+if __name__ == "__main__":
+    main()

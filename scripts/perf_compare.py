@@ -1,0 +1,37 @@
+"""§Perf before/after comparison across iteration directories."""
+import json, pathlib, zstandard
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import analyze_record
+
+def load(d, cell):
+    rec = json.loads(pathlib.Path(f"{d}/{cell}.json").read_text())
+    h = pathlib.Path(f"{d}/{cell}.hlo.zst")
+    rec["analysis"] = analyze_hlo(zstandard.ZstdDecompressor().decompress(h.read_bytes()).decode())
+    r = analyze_record(rec)
+    mem = rec.get("memory", {})
+    hbm = (mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)) / 2**30
+    return r, hbm
+
+RUNS = {
+ "deepseek-v3-671b__train_4k__pod16x16": [
+     ("baseline", "results/dryrun"), ("iter1 moe-act-sharding", "results/perf"),
+     ("iter2 sharded-expert-acts", "results/perf2"), ("iter3 param-rule fix", "results/perf3")],
+ "qwen2-vl-72b__train_4k__pod16x16": [
+     ("baseline", "results/dryrun"), ("iter1 flash-bf16-stack", "results/perf"),
+     ("iter2 causal-skip", "results/perf2")],
+ "falcon-mamba-7b__prefill_32k__pod16x16": [
+     ("baseline", "results/dryrun"), ("iter1 pallas-selective-scan", "results/perf")],
+}
+
+if __name__ == "__main__":
+    for cell, chain in RUNS.items():
+        print(f"\n== {cell} ==", flush=True)
+        for tag, d in chain:
+            try:
+                r, hbm = load(d, cell)
+                print(f"  {tag:<28} compute={r.compute_s:8.3f}s mem={r.memory_s:8.3f}s "
+                      f"coll={r.collective_s:8.3f}s bneck={r.bottleneck:<10} "
+                      f"roofline={100 * r.roofline_fraction:5.2f}% xla_mem={hbm:7.1f}GB",
+                      flush=True)
+            except Exception as e:
+                print(f"  {tag:<28} ERROR {type(e).__name__} {e}", flush=True)

@@ -1,0 +1,4 @@
+"""Template-based DCIM generator: structural Verilog netlists, gate-census
+audit vs the cost model, and a deterministic floorplanner (P&R stand-in)."""
+from .generator import design_from_point, generate  # noqa: F401
+from .verilog import DcimDesign, generate_netlists  # noqa: F401

@@ -1,0 +1,307 @@
+"""MOGA-based design space explorer (paper Fig. 4, §III-B).
+
+Drives NSGA-II per (precision, W_store, template), merges fronts across
+templates/precisions into one candidate set (re-extracting the joint
+Pareto front, as the paper's "Pareto set containing both integer and
+floating-point solutions"), applies *user-defined distillation*
+(application constraints), and hands selected points to the
+template-based generator.
+
+Also provides the exhaustive brute-force oracle (the log2-linear storage
+constraint makes the space finitely enumerable) and a distributed
+*island-model* NSGA-II over a JAX mesh (`shard_map` + ring migration via
+``lax.ppermute``) so the DSE itself scales to pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import nsga2
+from .cells import CALIBRATED, CellLibrary, TechParams, TSMC28
+from .macros import physical
+from .pareto import pareto_front_mask
+from .precision import Precision, get as get_precision
+from .space import DesignSpace, N_GENES
+
+
+@dataclasses.dataclass
+class ParetoPoint:
+    """One explored design, fully described for reports and codegen."""
+
+    precision: str
+    w_store: int
+    N: int
+    H: int
+    L: int
+    k: int
+    genes: np.ndarray
+    # normalized costs
+    area: float
+    delay: float
+    energy: float
+    throughput: float
+    # physical metrics (calibrated tech, activity applied)
+    area_mm2: float
+    delay_ns: float
+    energy_nJ: float
+    tops: float
+    tops_per_w: float
+    tops_per_mm2: float
+
+    @property
+    def objectives(self) -> np.ndarray:
+        return np.array(
+            [self.area, self.delay, self.energy, -self.throughput], np.float32
+        )
+
+    def summary(self) -> str:
+        return (
+            f"{self.precision:>5} W={self.w_store:>6} N={self.N:<5} H={self.H:<5}"
+            f" L={self.L:<3} k={self.k:<2} | {self.area_mm2:8.4f} mm^2"
+            f" {self.delay_ns:6.2f} ns {self.energy_nJ:8.4f} nJ"
+            f" {self.tops:7.3f} TOPS {self.tops_per_w:8.2f} TOPS/W"
+        )
+
+
+def _points_from_genes(
+    space: DesignSpace,
+    genes: np.ndarray,
+    tech: TechParams,
+    activity: float,
+) -> List[ParetoPoint]:
+    if genes.size == 0:
+        return []
+    g = jnp.asarray(genes.reshape(-1, N_GENES))
+    costs = space.costs(g)
+    phys = physical(costs, tech, activity)
+    N, H, L, k = (np.asarray(x) for x in space.decode(g))
+    out = []
+    for i in range(genes.shape[0]):
+        out.append(
+            ParetoPoint(
+                precision=space.prec.name,
+                w_store=space.w_store,
+                N=int(N[i]),
+                H=int(H[i]),
+                L=int(L[i]),
+                k=int(k[i]),
+                genes=np.asarray(genes[i]),
+                area=float(costs.area[i]),
+                delay=float(costs.delay[i]),
+                energy=float(costs.energy[i]),
+                throughput=float(costs.throughput[i]),
+                area_mm2=float(phys.area_mm2[i]),
+                delay_ns=float(phys.delay_ns[i]),
+                energy_nJ=float(phys.energy_nJ[i]),
+                tops=float(phys.tops[i]),
+                tops_per_w=float(phys.tops_per_w[i]),
+                tops_per_mm2=float(phys.tops_per_mm2[i]),
+            )
+        )
+    return out
+
+
+def brute_force_front(space: DesignSpace) -> np.ndarray:
+    """Exact Pareto-optimal genomes by full enumeration (the oracle)."""
+    genes = jnp.asarray(space.enumerate_feasible())
+    F, v = space.evaluate(genes)
+    mask = np.asarray(pareto_front_mask(F, v))
+    return np.asarray(genes)[mask]
+
+
+def explore(
+    precision: str | Precision,
+    w_store: int,
+    cfg: nsga2.NSGA2Config = nsga2.NSGA2Config(),
+    lib: CellLibrary = TSMC28,
+    tech: TechParams = CALIBRATED,
+    activity: float = 1.0,
+    method: str = "nsga2",
+    include_selection_mux: bool = False,
+) -> List[ParetoPoint]:
+    """Explore one (precision, W_store) scenario; returns its Pareto set."""
+    prec = get_precision(precision) if isinstance(precision, str) else precision
+    space = DesignSpace(
+        prec=prec, w_store=w_store, lib=lib,
+        include_selection_mux=include_selection_mux,
+    )
+    if method == "brute":
+        fg = brute_force_front(space)
+    else:
+        fg = nsga2.run(space, cfg).front_genes
+    return _points_from_genes(space, fg, tech, activity)
+
+
+def explore_multi(
+    scenarios: Sequence[tuple],
+    cfg: nsga2.NSGA2Config = nsga2.NSGA2Config(),
+    cross_dominate: bool = False,
+    **kw,
+) -> List[ParetoPoint]:
+    """Union of per-scenario fronts — the paper's merged INT+FP candidate
+    set handed to user distillation.
+
+    ``scenarios`` is a list of (precision, w_store).  By default points
+    of different precisions do NOT dominate each other (an INT8 design is
+    not a functional substitute for a BF16 one; the paper's distillation
+    step picks by application).  ``cross_dominate=True`` re-reduces the
+    union to a single joint front instead.
+    """
+    pts: List[ParetoPoint] = []
+    for prec, w in scenarios:
+        pts.extend(explore(prec, w, cfg, **kw))
+    if not pts or not cross_dominate:
+        return pts
+    F = jnp.asarray(np.stack([p.objectives for p in pts]))
+    mask = np.asarray(pareto_front_mask(F))
+    return [p for p, m in zip(pts, mask) if m]
+
+
+def distill(
+    points: Sequence[ParetoPoint],
+    max_area_mm2: Optional[float] = None,
+    max_power_mW: Optional[float] = None,
+    max_delay_ns: Optional[float] = None,
+    min_tops: Optional[float] = None,
+    min_tops_per_w: Optional[float] = None,
+    top: Optional[int] = None,
+    sort_by: str = "edp",
+) -> List[ParetoPoint]:
+    """User-defined distillation (paper Fig. 4): filter the Pareto set by
+    application constraints, then rank by a scalar figure of merit."""
+    sel = []
+    for p in points:
+        power_mW = p.energy_nJ / max(p.delay_ns, 1e-12) * 1e3
+        if max_area_mm2 is not None and p.area_mm2 > max_area_mm2:
+            continue
+        if max_power_mW is not None and power_mW > max_power_mW:
+            continue
+        if max_delay_ns is not None and p.delay_ns > max_delay_ns:
+            continue
+        if min_tops is not None and p.tops < min_tops:
+            continue
+        if min_tops_per_w is not None and p.tops_per_w < min_tops_per_w:
+            continue
+        sel.append(p)
+    keyfns = {
+        "edp": lambda p: p.energy_nJ * p.delay_ns,
+        "area": lambda p: p.area_mm2,
+        "delay": lambda p: p.delay_ns,
+        "energy": lambda p: p.energy_nJ,
+        "tops": lambda p: -p.tops,
+        "tops_per_w": lambda p: -p.tops_per_w,
+    }
+    sel.sort(key=keyfns[sort_by])
+    return sel[:top] if top else sel
+
+
+# --------------------------------------------------------------------------
+# Island-model NSGA-II: population-parallel DSE over a device mesh.
+# --------------------------------------------------------------------------
+def run_islands(
+    space: DesignSpace,
+    cfg: nsga2.NSGA2Config = nsga2.NSGA2Config(),
+    mesh: Optional[Mesh] = None,
+    axis: str = "data",
+    rounds: int = 4,
+    gens_per_round: int = 16,
+    n_migrants: int = 8,
+) -> nsga2.NSGA2Result:
+    """NSGA-II islands, one per device along ``axis``; every round the
+    best ``n_migrants`` individuals migrate along a ring
+    (``lax.ppermute``) and replace the worst.  Scales the paper's DSE to
+    pods with zero algorithmic drift (islands are plain NSGA-II).
+    """
+    if mesh is None:
+        dev = np.array(jax.devices())
+        mesh = Mesh(dev.reshape(-1), (axis,))
+    n_isl = mesh.shape[axis]
+    step = nsga2.make_step(space, cfg)
+
+    def island_body(pop, key):
+        # pop: (1, P, 3) local block -> squeeze island dim inside shard_map
+        pop = pop[0]
+        key = key[0]
+
+        def one_round(carry, r):
+            pop, key = carry
+            key = jax.random.fold_in(key, r)
+            (pop, _), visited = lax.scan(
+                step, (pop, key), jnp.arange(gens_per_round)
+            )
+            F, v = space.evaluate(pop)
+            ranks, crowd = nsga2._rank_and_crowd(F, v, cfg.use_pallas)
+            crowd_c = jnp.where(jnp.isinf(crowd), 1e30, crowd)
+            order = jnp.lexsort((-crowd_c, ranks))
+            best = pop[order[:n_migrants]]
+            if n_isl > 1:
+                perm = [(i, (i + 1) % n_isl) for i in range(n_isl)]
+                incoming = lax.ppermute(best, axis, perm)
+            else:
+                incoming = best
+            pop = pop.at[order[-n_migrants:]].set(incoming)
+            return (pop, key), visited.reshape(-1, N_GENES)
+
+        (pop, _), visited = lax.scan(one_round, (pop, key), jnp.arange(rounds))
+        archive = jnp.concatenate([visited.reshape(-1, N_GENES), pop], axis=0)
+        return pop[None], archive[None]
+
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = jax.random.split(key, n_isl)
+    pops = jax.vmap(lambda k: nsga2.init_population(space, cfg, k))(keys)
+
+    from jax import shard_map
+
+    body = shard_map(
+        island_body,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+        check_vma=False,
+    )
+    pops, archives = jax.jit(body)(pops, keys)
+    pop = np.asarray(pops).reshape(-1, N_GENES)
+
+    # Front over the union of all islands' elitist archives.
+    arch = np.unique(np.asarray(archives).reshape(-1, N_GENES), axis=0)
+    aF, av = space.evaluate(jnp.asarray(arch))
+    mask = np.asarray(pareto_front_mask(aF, av)) & (np.asarray(av) <= 0)
+    fg = arch[mask]
+    fF = np.asarray(aF)[mask]
+
+    F, v = space.evaluate(jnp.asarray(pop))
+    F, v = np.asarray(F), np.asarray(v)
+    ranks = np.asarray(
+        pareto_front_mask(jnp.asarray(F), jnp.asarray(v))
+    ) == False  # noqa: E712 - 0 for front, 1 otherwise
+    return nsga2.NSGA2Result(
+        genes=pop,
+        objectives=F,
+        violation=v,
+        ranks=ranks.astype(np.int32),
+        front_genes=fg,
+        front_objectives=fF,
+    )
+
+
+def timed_explore(precision: str, w_store: int, cfg=None) -> dict:
+    """DSE wall-time probe for the paper's '30 minutes per scenario' claim."""
+    cfg = cfg or nsga2.NSGA2Config()
+    t0 = time.perf_counter()
+    pts = explore(precision, w_store, cfg)
+    t1 = time.perf_counter()
+    return dict(
+        precision=precision,
+        w_store=w_store,
+        seconds=t1 - t0,
+        front_size=len(pts),
+    )

@@ -1,0 +1,129 @@
+"""Pareto utilities: dominance, non-dominated sorting, crowding, hypervolume.
+
+Implements Eq. (1) of the paper (Pareto dominance in a minimization
+context) plus Deb's constrained-domination rule used by the NSGA-II
+explorer.  Everything is jit/vmap friendly; the O(P^2 M) dominance matrix
+can alternatively be produced by the ``pareto_rank`` Pallas kernel
+(kernels/pareto_rank.py) — both paths are tested against each other.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _sanitize(F: jnp.ndarray) -> jnp.ndarray:
+    """Replace NaN with +inf so broken candidates lose every comparison."""
+    return jnp.where(jnp.isnan(F), jnp.inf, F)
+
+
+def dominates(u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Eq. (1): u pareto-dominates v (minimization), broadcasting on the
+    leading axes; objectives are on the last axis."""
+    le = jnp.all(u <= v, axis=-1)
+    lt = jnp.any(u < v, axis=-1)
+    return le & lt
+
+
+def dominance_matrix(F: jnp.ndarray, violation: jnp.ndarray | None = None) -> jnp.ndarray:
+    """D[i, j] == True iff candidate i (constrained-)dominates candidate j.
+
+    Constrained domination (Deb 2002): a feasible point dominates any
+    infeasible point; among infeasible points, smaller total violation
+    dominates; among feasible points, plain Pareto dominance applies.
+    """
+    F = _sanitize(F)
+    pd = dominates(F[:, None, :], F[None, :, :])
+    if violation is None:
+        return pd
+    v = jnp.asarray(violation, jnp.float32)
+    feas_i = (v <= 0.0)[:, None]
+    feas_j = (v <= 0.0)[None, :]
+    both_feas = feas_i & feas_j
+    return (both_feas & pd) | (v[:, None] < v[None, :])
+
+
+def pareto_front_mask(F: jnp.ndarray, violation: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Boolean mask of globally non-dominated candidates."""
+    D = dominance_matrix(F, violation)
+    return ~jnp.any(D, axis=0)
+
+
+def non_dominated_sort(
+    F: jnp.ndarray,
+    violation: jnp.ndarray | None = None,
+    dom: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Front ranks (0 = best) by iterative peeling of the dominance matrix.
+
+    ``dom`` may be supplied (e.g. from the Pallas kernel) to skip the
+    in-graph matrix construction.
+    """
+    P = F.shape[0]
+    D = dominance_matrix(F, violation) if dom is None else dom
+
+    def cond(state):
+        ranks, r = state
+        return (r < P) & jnp.any(ranks >= P)
+
+    def body(state):
+        ranks, r = state
+        unassigned = ranks >= P
+        dom_cnt = jnp.sum(D & unassigned[:, None], axis=0)
+        front = unassigned & (dom_cnt == 0)
+        return jnp.where(front, r, ranks), r + 1
+
+    ranks0 = jnp.full((P,), P, jnp.int32)
+    ranks, _ = lax.while_loop(cond, body, (ranks0, jnp.int32(0)))
+    return ranks
+
+
+def crowding_distance(F: jnp.ndarray, ranks: jnp.ndarray) -> jnp.ndarray:
+    """NSGA-II crowding distance, computed per front (objective ranges are
+    normalized within each front).  Boundary points get +inf."""
+    F = _sanitize(F)
+    P, M = F.shape
+    big = jnp.where(jnp.isinf(F), jnp.nan, F)
+    # Per-front objective ranges via segment reductions keyed by rank.
+    fmin = jax.ops.segment_min(F, ranks, num_segments=P)
+    fmax = jax.ops.segment_max(F, ranks, num_segments=P)
+    rng = jnp.maximum((fmax - fmin)[ranks], 1e-12)   # (P, M)
+    del big
+
+    pos = jnp.arange(P)
+    d = jnp.zeros((P,), jnp.float32)
+    for mth in range(M):
+        order = jnp.lexsort((F[:, mth], ranks))
+        f_s = F[order, mth]
+        r_s = ranks[order]
+        same_prev = (jnp.roll(r_s, 1) == r_s) & (pos > 0)
+        same_next = (jnp.roll(r_s, -1) == r_s) & (pos < P - 1)
+        gap = jnp.roll(f_s, -1) - jnp.roll(f_s, 1)
+        contrib = jnp.where(
+            same_prev & same_next,
+            gap / rng[order, mth],
+            jnp.inf,
+        )
+        d = d.at[order].add(contrib.astype(jnp.float32))
+    return d
+
+
+def hypervolume_mc(
+    F: jnp.ndarray,
+    ref: jnp.ndarray,
+    key: jax.Array,
+    n_samples: int = 200_000,
+) -> jnp.ndarray:
+    """Monte-Carlo hypervolume (minimization, w.r.t. reference point ``ref``).
+
+    Used as a front-quality metric when comparing NSGA-II to the
+    brute-force oracle; exact HV in 4D is unnecessary for that purpose.
+    """
+    F = _sanitize(F)
+    lo = jnp.min(F, axis=0)
+    box = jnp.maximum(ref - lo, 1e-12)
+    u = jax.random.uniform(key, (n_samples, F.shape[-1]))
+    pts = lo + u * box
+    dominated = jnp.any(jnp.all(F[None, :, :] <= pts[:, None, :], axis=-1), axis=1)
+    return jnp.mean(dominated) * jnp.prod(box)

@@ -1,0 +1,142 @@
+"""The SEGA-DCIM design space (paper Eq. (2)/(3) + §IV bounds).
+
+Design variables (all powers of two, as in the paper's experiments):
+
+    N = B_w * 2^j   columns          (N > 4*B_w  =>  j >= 3)
+    H = 2^h         column height    (H <= 2048)
+    L = 2^l         weights / compute unit  (L <= 64)
+    k = 2^kk        input bits per cycle    (k <= B_x)
+
+The storage constraint  N*H*L = W_store*B_w  (Eq. 2; Eq. 3 with the B_M
+typo corrected to the stored weight width, DESIGN.md §8.2) becomes linear
+in log2:  j + h + l = log2(W_store).  The genome is (j, h, kk); ``l`` is
+*derived*, so the equality constraint is satisfied by construction and
+only the box bound on l can be violated (handled by Deb's
+constrained-domination).  This also means the whole space is finitely
+enumerable, giving an exact Pareto oracle to validate NSGA-II against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cells import CellLibrary, TSMC28
+from .macros import MacroCosts, macro_costs
+from .precision import Precision
+
+N_GENES = 3  # (j, h, kk)
+
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpace:
+    prec: Precision
+    w_store: int
+    h_min_log2: int = 1          # H >= 2
+    h_max_log2: int = 11         # H <= 2048 (paper §IV)
+    l_max_log2: int = 6          # L <= 64   (paper §IV)
+    j_min: int = 3               # N > 4*B_w (paper §IV)
+    lib: CellLibrary = TSMC28
+    include_selection_mux: bool = False
+
+    def __post_init__(self):
+        if self.w_store & (self.w_store - 1):
+            raise ValueError(f"W_store must be a power of two, got {self.w_store}")
+
+    @property
+    def s_log2(self) -> int:
+        return int(math.log2(self.w_store))
+
+    @property
+    def j_max(self) -> int:
+        # j + h + l = s with h >= h_min, l >= 0.
+        return self.s_log2 - self.h_min_log2
+
+    @property
+    def kk_max(self) -> int:
+        return int(math.floor(math.log2(self.prec.B_x)))
+
+    @property
+    def gene_lo(self) -> np.ndarray:
+        return np.array([self.j_min, self.h_min_log2, 0], np.int32)
+
+    @property
+    def gene_hi(self) -> np.ndarray:
+        return np.array([self.j_max, self.h_max_log2, self.kk_max], np.int32)
+
+    # --- decoding ----------------------------------------------------------
+    def derived_l(self, genes: jnp.ndarray) -> jnp.ndarray:
+        return self.s_log2 - genes[..., 0] - genes[..., 1]
+
+    def decode(self, genes: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+        """genes (..., 3) int32 -> (N, H, L, k) float32 arrays.
+
+        ``l`` is clamped into its box for cost evaluation; the true
+        violation is reported separately by :meth:`violation`.
+        """
+        one = jnp.int32(1)
+        j = genes[..., 0].astype(jnp.int32)
+        h = genes[..., 1].astype(jnp.int32)
+        l = jnp.clip(self.derived_l(genes).astype(jnp.int32), 0, self.l_max_log2)
+        kk = genes[..., 2].astype(jnp.int32)
+        # Integer bit-shifts: jnp.exp2 is inexact on some backends.
+        N = (self.prec.B_w * (one << j)).astype(jnp.float32)
+        return (
+            N,
+            (one << h).astype(jnp.float32),
+            (one << l).astype(jnp.float32),
+            (one << kk).astype(jnp.float32),
+        )
+
+    def violation(self, genes: jnp.ndarray) -> jnp.ndarray:
+        l = self.derived_l(genes).astype(jnp.float32)
+        return jnp.maximum(-l, 0.0) + jnp.maximum(l - self.l_max_log2, 0.0)
+
+    # --- evaluation ----------------------------------------------------------
+    def costs(self, genes: jnp.ndarray) -> MacroCosts:
+        N, H, L, k = self.decode(genes)
+        return macro_costs(
+            N, H, L, k, self.prec, self.lib,
+            include_selection_mux=self.include_selection_mux,
+        )
+
+    def evaluate(self, genes: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """genes (..., 3) -> (objectives (..., 4) [A, D, E, -T], violation)."""
+        return self.costs(genes).objectives(), self.violation(genes)
+
+    # --- exhaustive oracle ----------------------------------------------------
+    def enumerate_feasible(self) -> np.ndarray:
+        """All feasible genomes, shape (n, 3) — the exact-design-space oracle."""
+        out = []
+        for j in range(self.j_min, self.j_max + 1):
+            for h in range(self.h_min_log2, self.h_max_log2 + 1):
+                l = self.s_log2 - j - h
+                if not (0 <= l <= self.l_max_log2):
+                    continue
+                for kk in range(0, self.kk_max + 1):
+                    out.append((j, h, kk))
+        if not out:
+            raise ValueError(
+                f"design space empty for {self.prec.name}, W_store={self.w_store}"
+            )
+        return np.asarray(out, np.int32)
+
+    def describe(self, genes: np.ndarray) -> dict:
+        """Human-readable design point for reports / the generator."""
+        g = np.asarray(genes).reshape(3)
+        N, H, L, k = (int(float(x)) for x in self.decode(jnp.asarray(g)))
+        return dict(
+            precision=self.prec.name,
+            w_store=self.w_store,
+            N=N,
+            H=H,
+            L=L,
+            k=k,
+            B_w=self.prec.B_w,
+            B_x=self.prec.B_x,
+            B_E=self.prec.B_E,
+            sram_bits=N * H * L,
+        )

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticLM, TokenFileDataset, make_dataset  # noqa: F401

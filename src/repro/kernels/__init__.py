@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for SEGA-DCIM hot spots (validated on CPU via
+interpret mode): pareto_rank (NSGA-II dominance), dcim_mvm (bit-serial
+DCIM MAC), fp_prealign (FP pre-alignment)."""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,163 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled (``interpret=False``); on CPU they run in
+Pallas interpret mode, which lowers the kernel body to regular XLA ops —
+bit-exact with the TPU path and still jit-compatible.  ``interpret`` is
+auto-detected from the default backend unless forced.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import dcim_mvm as _mvm
+from . import fp_prealign as _pre
+from . import pareto_rank as _rank
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --- pareto_rank -------------------------------------------------------------
+def dominance_matrix(F, violation=None, interpret: bool | None = None):
+    """(P, M) objectives -> (P, P) bool constrained-dominance matrix."""
+    out = _rank.dominance_matrix_pallas(
+        jnp.asarray(F),
+        None if violation is None else jnp.asarray(violation),
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+    return out.astype(jnp.bool_)
+
+
+# --- dcim_mvm ----------------------------------------------------------------
+def dcim_mvm(
+    x,
+    w,
+    B_x: int = 8,
+    B_w: int = 8,
+    k: int = 4,
+    x_signed: bool = True,
+    w_signed: bool = True,
+    interpret: bool | None = None,
+):
+    """Exact integer matmul through the DCIM bit-serial dataflow."""
+    return _mvm.dcim_mvm_pallas(
+        jnp.asarray(x),
+        jnp.asarray(w),
+        B_x=B_x,
+        B_w=B_w,
+        k=k,
+        x_signed=x_signed,
+        w_signed=w_signed,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+
+
+# --- fp_prealign ---------------------------------------------------------------
+def fp_prealign(x, H: int, B_M: int = 8, interpret: bool | None = None):
+    """x: (M, K) f32, groups of H along K -> (mant (M, G, H) int32,
+    group biased exponents (M, G) int32)."""
+    M, K = x.shape
+    assert K % H == 0, f"K={K} not divisible by group height H={H}"
+    xg = jnp.asarray(x, jnp.float32).reshape(M, K // H, H)
+    return _pre.fp_prealign_pallas(
+        xg, B_M=B_M,
+        interpret=_interpret_default() if interpret is None else interpret,
+    )
+
+
+# --- composed pre-aligned block-FP matmul (FP-DCIM pipeline) -------------------
+@functools.partial(
+    jax.jit, static_argnames=("H", "B_M", "B_w", "k", "interpret")
+)
+def dcim_fp_matmul(
+    x,
+    w,
+    H: int = 64,
+    B_M: int = 8,
+    B_w: int = 8,
+    k: int = 4,
+    interpret: bool | None = None,
+):
+    """Full pre-aligned FP-DCIM pipeline (paper Fig. 3), end to end:
+
+      1. online: pre-align input mantissas per H-group along K,
+      2. offline: pre-align weight mantissas per H-group along K,
+      3. integer mantissa MAC in the DCIM array (dcim_mvm per group),
+      4. INT->FP conversion: scale each group's integer partial sum by
+         2^(ex + ew) and accumulate in f32.
+
+    x: (M, K) f32;  w: (K, N) f32;  returns (M, N) f32 approximating x @ w
+    with block-FP (shared-group-exponent) numerics.
+    """
+    interp = _interpret_default() if interpret is None else interpret
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2 and K % H == 0
+    G = K // H
+
+    mant_x, ex = fp_prealign(x, H, B_M, interpret=interp)          # (M,G,H),(M,G)
+    mant_w, ew = fp_prealign(w.T, H, B_w, interpret=interp)        # (N,G,H),(N,G)
+
+    import math
+
+    narrow = (B_M + 1) + (B_w + 1) + math.ceil(math.log2(H)) <= 31
+
+    if narrow:
+        # Per-group integer MAC; exact in int32 (the hardware's B_r-wide
+        # accumulator fits).  vmap over groups; each group is an exact
+        # integer matmul through the bit-serial kernel.
+        def group_mm(mx, mw):                                      # (M,H),(N,H)
+            return _mvm.dcim_mvm_pallas(
+                mx, mw.T, B_x=B_M + 1, B_w=B_w + 1, k=k,
+                x_signed=True, w_signed=True, interpret=interp,
+            ).astype(jnp.float32)
+    else:
+        # Wide-mantissa path (FP32): split each mantissa into a signed
+        # high half and an unsigned 12-bit low half; 4 partial integer
+        # matmuls emulate the hardware's B_r-wide adder.  The 2^24/2^12
+        # recombination happens in f32 (one extra rounding vs hardware,
+        # bounded by 2^-24 relative).
+        SPLIT = 12
+        # Operand magnitudes: |hi| <= 2^(B-SPLIT), lo < 2^SPLIT.
+        worst = 2 ** (2 * max(max(B_M, B_w) - SPLIT, SPLIT))
+        if H * worst > 2**31:
+            raise ValueError(
+                f"H={H} too large for wide-mantissa emulation (B_M={B_M})"
+            )
+
+        def group_mm(mx, mw):
+            xh, xl = mx >> SPLIT, mx & ((1 << SPLIT) - 1)
+            wh, wl = mw >> SPLIT, mw & ((1 << SPLIT) - 1)
+
+            def mm(a, b, bx, bw, xs, ws):
+                return _mvm.dcim_mvm_pallas(
+                    a, b.T, B_x=bx, B_w=bw, k=k,
+                    x_signed=xs, w_signed=ws, interpret=interp,
+                ).astype(jnp.float32)
+
+            hi_bits = max(B_M, B_w) + 1 - SPLIT + 1
+            p_hh = mm(xh, wh, hi_bits, hi_bits, True, True)
+            p_hl = mm(xh, wl, hi_bits, SPLIT, True, False)
+            p_lh = mm(xl, wh, SPLIT, hi_bits, False, True)
+            p_ll = mm(xl, wl, SPLIT, SPLIT, False, False)
+            return (
+                p_hh * float(2 ** (2 * SPLIT))
+                + (p_hl + p_lh) * float(2**SPLIT)
+                + p_ll
+            )
+
+    partials = jax.vmap(group_mm, in_axes=(1, 1))(mant_x, mant_w)  # (G,M,N)
+
+    # INT->FP converter: 2^(ex+ew) group scale, remove the two mantissa
+    # fixed-point offsets (B_M-1 / B_w-1) and the two IEEE biases (127).
+    scale = jnp.exp2(
+        ex[:, :, None].astype(jnp.float32)
+        + ew.T[None, :, :].astype(jnp.float32)
+        - (2 * 127 + (B_M - 1) + (B_w - 1))
+    )                                                              # (M,G,N)
+    out = jnp.sum(partials.transpose(1, 0, 2) * scale, axis=1)
+    return out.astype(jnp.float32)

@@ -1,0 +1,115 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each oracle is written *differently* from its kernel (no shared bit
+tricks where avoidable) so that agreement is meaningful:
+
+  * dominance_matrix_ref: broadcasted jnp comparisons.
+  * dcim_mvm_ref: plain exact integer matmul (what a full-precision DCIM
+    macro must compute).
+  * dcim_mvm_structural_ref: the bit-serial decomposition in straight
+    jnp — validates the algebra of the dataflow independently of Pallas.
+  * fp_prealign_ref: mantissa/exponent via jnp.frexp (float path) instead
+    of the kernel's int32 bit-twiddling.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+# --- pareto_rank -----------------------------------------------------------
+def dominance_matrix_ref(F, violation=None):
+    F = jnp.where(jnp.isnan(F), jnp.inf, F.astype(jnp.float32))
+    le = jnp.all(F[:, None, :] <= F[None, :, :], axis=-1)
+    lt = jnp.any(F[:, None, :] < F[None, :, :], axis=-1)
+    pdom = le & lt
+    if violation is None:
+        return pdom
+    v = violation.astype(jnp.float32)
+    feas = v <= 0.0
+    return (feas[:, None] & feas[None, :] & pdom) | (v[:, None] < v[None, :])
+
+
+# --- dcim_mvm ---------------------------------------------------------------
+def dcim_mvm_ref(x, w):
+    """Exact integer matmul — the semantic spec of the DCIM macro."""
+    return jnp.matmul(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def dcim_mvm_structural_ref(x, w, B_x=8, B_w=8, k=4, x_signed=True, w_signed=True):
+    """The bit-serial dataflow (slices x bit-planes + two's-complement
+    corrections) in pure jnp."""
+    x = x.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    U = jnp.bitwise_and(x, (1 << B_x) - 1)
+    V = jnp.bitwise_and(w, (1 << B_w) - 1)
+    n_slices = -(-B_x // k)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for b in range(B_w):
+        v_plane = jnp.bitwise_and(jnp.right_shift(V, b), 1)
+        for s in range(n_slices):
+            u_slice = jnp.bitwise_and(jnp.right_shift(U, s * k), (1 << k) - 1)
+            acc = acc + (jnp.matmul(u_slice, v_plane) << (b + s * k))
+    if w_signed:
+        neg_w = (w < 0).astype(jnp.int32)
+        acc = acc - (jnp.matmul(U, neg_w) << B_w)
+    if x_signed:
+        neg_x = (x < 0).astype(jnp.int32)
+        acc = acc - (jnp.matmul(neg_x, V) << B_x)
+        if w_signed:
+            acc = acc + (jnp.matmul(neg_x, neg_w) << (B_x + B_w))
+    return acc
+
+
+# --- fp_prealign -------------------------------------------------------------
+def fp_prealign_ref(x, B_M=8):
+    """x: (M, G, H) f32 -> aligned int32 mantissas + biased group exponents,
+    via jnp.frexp (no bit twiddling).  Subnormals flush to zero, matching
+    the hardware datapath."""
+    x = x.astype(jnp.float32)
+    tiny = 2.0 ** -126
+    is_zero = jnp.abs(x) < tiny
+    frac, e = jnp.frexp(jnp.where(is_zero, 1.0, x))   # |frac| in [0.5, 1)
+    exp = jnp.where(is_zero, 0, e + 126)              # IEEE biased exponent
+    mant = jnp.floor(jnp.abs(frac) * (1 << B_M)).astype(jnp.int32)
+    mant = jnp.where(is_zero, 0, mant)
+    mant = jnp.where(x < 0, -mant, mant)
+    emax = jnp.max(exp, axis=-1)
+    shift = jnp.minimum(emax[..., None] - exp, 31)
+    # Arithmetic right shift == floor division by 2^shift without the
+    # int32 overflow of (1 << 31).
+    aligned = jnp.right_shift(mant, shift)
+    return aligned.astype(jnp.int32), emax.astype(jnp.int32)
+
+
+def fp_matmul_f32_ref(x, w):
+    """Plain float32 matmul — the accuracy yardstick for the pre-aligned
+    block-FP pipeline."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+# --- selective_scan -----------------------------------------------------------
+def selective_scan_ref(u, dt, B_c, C_c, A, D_skip, h0=None):
+    """Sequential-oracle Mamba-1 recurrence in pure jnp (lax.scan over
+    time): h_t = exp(dt A) h_{t-1} + dt u B_t ;  y_t = h_t . C_t + D u_t."""
+    import jax
+
+    u = u.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    Bsz, S, D = u.shape
+    N = B_c.shape[-1]
+    h = jnp.zeros((Bsz, D, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, b_t, c_t = xs
+        h = jnp.exp(dt_t[..., None] * A) * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + D_skip * u_t
+        return h, y
+
+    xs = (u.swapaxes(0, 1), dt.swapaxes(0, 1),
+          B_c.astype(jnp.float32).swapaxes(0, 1),
+          C_c.astype(jnp.float32).swapaxes(0, 1))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.swapaxes(0, 1), h

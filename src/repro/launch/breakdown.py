@@ -1,0 +1,120 @@
+"""Per-op breakdown of a dry-run cell's stored HLO: top contributors to
+FLOPs / HBM bytes / collective bytes, with while-trip multipliers — the
+"profile" used by the §Perf hypothesis loop (no real hardware here, so
+the lowered IR is the profile, per the brief).
+
+    PYTHONPATH=src python -m repro.launch.breakdown \
+        results/dryrun/deepseek-v3-671b__train_4k__pod16x16.hlo.zst --top 15
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+import zstandard
+
+from .hlo_analysis import (
+    _COLLECTIVES, _CONTRACT_RE, _OPERAND_RE, _shape_bytes, _shape_elems,
+    _first_dims, _trip_count, HloAnalyzer, parse_computations,
+)
+
+
+def op_breakdown(text: str) -> Dict[str, List[Tuple[float, str]]]:
+    comps = parse_computations(text)
+    an = HloAnalyzer(text)
+
+    # Effective multiplier per computation (product of enclosing trips).
+    mult: Dict[str, float] = defaultdict(float)
+
+    def walk(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                cond = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                trips = 1
+                if cond and cond.group(1) in comps:
+                    trips = _trip_count(comps[cond.group(1)], comp.symtab, op.rest)
+                if body:
+                    walk(body.group(1), m * trips)
+            elif op.opcode in ("fusion", "call", "reduce", "map"):
+                mm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", op.rest)
+                if mm and mm.group(1) in comps:
+                    walk(mm.group(1), m)
+
+    entry = an.entry
+    walk(entry, 1.0)
+
+    flops: List[Tuple[float, str]] = []
+    mem: List[Tuple[float, str]] = []
+    coll: List[Tuple[float, str]] = []
+    for cname, m in mult.items():
+        comp = comps[cname]
+        for op in comp.ops:
+            meta = re.search(r'op_name="([^"]+)"', op.rest)
+            tag = (meta.group(1)[-80:] if meta else op.name)
+            label = f"{op.opcode:<12} {op.shape[:38]:<40} x{m:<6.0f} {tag}"
+            if op.opcode == "dot":
+                f = an._dot_flops(comp, op) * m
+                flops.append((f, label))
+            if op.opcode == "dynamic-update-slice" or an._is_dus_fusion(op):
+                sizes = sorted(
+                    _shape_bytes(comp.symtab.get(r, ""))
+                    for r in _OPERAND_RE.findall(op.rest.split(")")[0])
+                )
+                moved = sum(sizes[:-1]) if len(sizes) > 1 else 0
+                mem.append((2 * moved * m, label))
+            elif op.opcode in ("dynamic-slice", "gather", "slice") or \
+                    an._is_ds_fusion(op):
+                mem.append((2 * _shape_bytes(op.shape) * m, label))
+            elif op.opcode not in ("parameter", "constant", "get-tuple-element",
+                                   "tuple", "bitcast", "after-all", "while",
+                                   "conditional", "call", "convert"):
+                ob = _shape_bytes(op.shape)
+                head = op.rest.split(")")[0]
+                opnd = sum(
+                    _shape_bytes(comp.symtab.get(r, ""))
+                    for r in _OPERAND_RE.findall(head)
+                )
+                mem.append(((ob + opnd) * m, label))
+            for c in _COLLECTIVES:
+                if op.opcode == c or op.opcode == c + "-start":
+                    coll.append((_shape_bytes(op.shape) * m, label))
+                    break
+    for lst in (flops, mem, coll):
+        lst.sort(key=lambda t: -t[0])
+    return {"flops": flops, "mem": mem, "coll": coll}
+
+
+def load_hlo(path: str) -> str:
+    p = pathlib.Path(path)
+    raw = p.read_bytes()
+    if p.suffix == ".zst":
+        raw = zstandard.ZstdDecompressor().decompress(raw)
+    return raw.decode()
+
+
+def main():  # pragma: no cover
+    ap = argparse.ArgumentParser()
+    ap.add_argument("hlo")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+    text = load_hlo(args.hlo)
+    bd = op_breakdown(text)
+    for section, unit, scale in (("flops", "GFLOP", 1e9), ("mem", "GB", 1e9),
+                                 ("coll", "GB", 1e9)):
+        rows = bd[section][: args.top]
+        total = sum(v for v, _ in bd[section])
+        print(f"\n== top {section} (total {total / scale:.2f} {unit}) ==")
+        for v, label in rows:
+            print(f"  {v / scale:>10.3f} {unit}  {label}")
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

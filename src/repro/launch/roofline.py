@@ -1,0 +1,264 @@
+"""Roofline analysis (deliverable g).
+
+Reads the per-cell dry-run JSONs and derives, per (arch x shape) on the
+single-pod mesh, the three roofline terms **per device per step**:
+
+  compute    = HLO_dot_FLOPs / peak_FLOPs            (197 TFLOP/s bf16)
+  memory     = HLO_mem_bytes / HBM_bw                (819 GB/s)
+  collective = sum over collective ops of
+                 bytes * ring_factor / link_bw       (~50 GB/s/link)
+
+HLO_* come from the trip-count-aware analyzer (launch/hlo_analysis);
+XLA's own cost_analysis (body-once) is kept for reference.  The ring
+factor models per-device wire traffic: all-gather/reduce-scatter move
+(n-1)/n of the payload, all-reduce 2(n-1)/n, all-to-all (n-1)/n, and
+collective-permute 1.  Since axis membership per op is not recovered
+from HLO, n is taken as the mesh size (upper bound, noted in
+EXPERIMENTS.md).
+
+MODEL_FLOPS uses 6*N_active*tokens (train) / 2*N_active*tokens
+(prefill & decode) per the brief; the MODEL/HLO ratio flags
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, List, Optional
+
+from repro import configs
+from repro.models.config import LMConfig
+from repro.models.mamba import ssm_dims
+
+PEAK_FLOPS = 197e12         # bf16 / chip
+HBM_BW = 819e9              # bytes/s / chip
+ICI_BW = 50e9               # bytes/s / link
+
+
+# ---------------------------- parameter counting ------------------------------
+def param_counts(cfg: LMConfig) -> Dict[str, float]:
+    """Total and per-token-active parameter counts (analytic)."""
+    D = cfg.d_model
+    hd = cfg.hd
+    total = active = 0.0
+
+    for i in range(cfg.n_layers):
+        mk, fk = cfg.mixer_kind(i), cfg.ffn_of(i)
+        if mk == "gqa":
+            p = D * cfg.n_heads * hd + 2 * D * cfg.n_kv * hd + cfg.n_heads * hd * D
+        elif mk == "mla":
+            m = cfg.mla
+            p = (D * m.q_lora_rank
+                 + m.q_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.qk_rope_dim)
+                 + D * (m.kv_lora_rank + m.qk_rope_dim)
+                 + m.kv_lora_rank * cfg.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                 + cfg.n_heads * m.v_head_dim * D)
+        else:
+            d_inner, dt_rank = ssm_dims(cfg)
+            s = cfg.ssm
+            p = (D * 2 * d_inner + d_inner * (dt_rank + 2 * s.d_state)
+                 + dt_rank * d_inner + d_inner * D + d_inner * (s.d_conv + s.d_state + 2))
+        total += p
+        active += p
+
+        if fk == "dense":
+            f = (3 if cfg.act == "swiglu" else 2) * D * cfg.d_ff
+            total += f
+            active += f
+        elif fk == "moe":
+            m = cfg.moe
+            per_expert = 3 * D * m.d_ff
+            total += m.n_experts * per_expert + D * m.n_experts
+            active += m.top_k * per_expert + D * m.n_experts
+            if m.n_shared:
+                sh = 3 * D * (m.d_ff * m.n_shared)
+                total += sh
+                active += sh
+
+    if cfg.mtp:
+        # depth-1 MTP: one extra block (same structure as layer 0) + proj
+        one_layer = (total / cfg.n_layers) if cfg.n_layers else 0.0
+        total += one_layer + 2 * D * D
+        active += one_layer + 2 * D * D
+
+    emb = cfg.vocab_size * D
+    if not cfg.external_embed:
+        total += emb
+        active += emb
+    if not cfg.tie_embeddings:
+        total += emb       # head
+        active += emb
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg: LMConfig, kind: str, seq: int, batch: int) -> float:
+    pc = param_counts(cfg)
+    n_active = pc["active"]
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * batch
+
+
+_RING_FACTOR = {
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-reduce": 2.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    hlo_flops: float = 0.0
+    model_flops: float = 0.0
+    flops_ratio: float = 0.0        # MODEL / HLO (per step, global)
+    roofline_fraction: float = 0.0  # max-term time vs compute-bound ideal
+    coll_bytes: float = 0.0
+    mem_bytes: float = 0.0
+    device_bytes: float = 0.0       # args+temps per device (fits-in-HBM check)
+    note: str = ""
+
+
+def analyze_record(rec: dict) -> RooflineRow:
+    row = RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        status=rec.get("status", "?"),
+    )
+    if rec.get("status") != "ok" or "analysis" not in rec:
+        row.note = rec.get("error", rec.get("status", ""))
+        return row
+    a = rec["analysis"]
+    n_dev = rec.get("n_devices", 256)
+    cfg = configs.entry(rec["arch"]).config()
+    kind = rec["kind"]
+
+    flops_dev = a["dot_flops"] + a.get("elem_flops", 0.0)
+    row.hlo_flops = flops_dev * n_dev
+    row.model_flops = model_flops(cfg, kind, rec["seq_len"], rec["global_batch"])
+    row.flops_ratio = row.model_flops / max(row.hlo_flops, 1.0)
+
+    row.compute_s = flops_dev / PEAK_FLOPS
+    row.mem_bytes = a.get("mem_bytes", 0.0)
+    row.memory_s = row.mem_bytes / HBM_BW
+    coll_s = 0.0
+    coll_b = 0.0
+    n = n_dev
+    for k, v in a["collectives"].items():
+        eff = v["bytes"] * _RING_FACTOR[k] * (n - 1) / n
+        coll_s += eff / ICI_BW
+        coll_b += v["bytes"]
+    row.collective_s = coll_s
+    row.coll_bytes = coll_b
+
+    terms = {"compute": row.compute_s, "memory": row.memory_s,
+             "collective": row.collective_s}
+    row.bottleneck = max(terms, key=terms.get)
+    ideal = row.model_flops / (n_dev * PEAK_FLOPS)
+    worst = max(terms.values())
+    row.roofline_fraction = ideal / worst if worst > 0 else 0.0
+
+    mem = rec.get("memory", {})
+    if isinstance(mem, dict) and "temp_size_in_bytes" in mem:
+        row.device_bytes = (
+            mem.get("argument_size_in_bytes", 0)
+            + mem.get("temp_size_in_bytes", 0)
+        )
+    return row
+
+
+def load_rows(dryrun_dir="results/dryrun", mesh: Optional[str] = "pod16x16") -> List[RooflineRow]:
+    rows = []
+    for f in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        # Prefer re-analyzing stored HLO (analyzer improvements apply
+        # retroactively without recompiling).
+        hlo_f = f.with_suffix(".hlo.zst")
+        if rec.get("status") == "ok" and hlo_f.exists():
+            import zstandard
+
+            from repro.launch.hlo_analysis import analyze_hlo
+
+            text = zstandard.ZstdDecompressor().decompress(
+                hlo_f.read_bytes()
+            ).decode()
+            rec["analysis"] = analyze_hlo(text)
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':<22}{'shape':<13}{'status':<9}{'compute_s':>11}"
+           f"{'memory_s':>11}{'coll_s':>11}{'bottleneck':>12}"
+           f"{'MODEL/HLO':>10}{'roofline%':>10}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.status != "ok":
+            out.append(f"{r.arch:<22}{r.shape:<13}{r.status:<9}  {r.note[:60]}")
+            continue
+        out.append(
+            f"{r.arch:<22}{r.shape:<13}{r.status:<9}"
+            f"{r.compute_s:>11.4f}{r.memory_s:>11.4f}{r.collective_s:>11.4f}"
+            f"{r.bottleneck:>12}{r.flops_ratio:>10.3f}"
+            f"{100 * r.roofline_fraction:>9.1f}%"
+        )
+    return "\n".join(out)
+
+
+def format_markdown(rows: List[RooflineRow]) -> str:
+    out = [
+        "| arch | shape | status | compute_s | memory_s | coll_s |"
+        " bottleneck | MODEL/HLO | roofline | HBM GB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.status != "ok":
+            out.append(f"| {r.arch} | {r.shape} | {r.status} | | | | | | | |")
+            continue
+        gb = r.device_bytes / 2**30
+        fits = "" if gb <= 16 else " ⚠"
+        out.append(
+            f"| {r.arch} | {r.shape} | {r.status} | {r.compute_s:.4f} |"
+            f" {r.memory_s:.4f} | {r.collective_s:.4f} | {r.bottleneck} |"
+            f" {r.flops_ratio:.3f} | {100 * r.roofline_fraction:.1f}% |"
+            f" {gb:.1f}{fits} |"
+        )
+    return "\n".join(out)
+
+
+def main():  # pragma: no cover
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--summary", action="store_true",
+                    help="emit a markdown table (for EXPERIMENTS.md)")
+    args = ap.parse_args()
+    rows = load_rows(args.dir, args.mesh)
+    print(format_markdown(rows) if args.summary else format_table(rows))
+    if args.json_out:
+        pathlib.Path(args.json_out).write_text(
+            json.dumps([dataclasses.asdict(r) for r in rows], indent=2)
+        )
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

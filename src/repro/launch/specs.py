@@ -1,0 +1,69 @@
+"""Input specs: abstract (ShapeDtypeStruct) stand-ins for every model
+input, per (arch-config x shape x step-kind), plus concrete batch makers
+for smoke tests and the training example.
+
+``abstract_batch`` never allocates — it is what the multi-pod dry-run
+lowers against.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import LMConfig
+
+
+def _sds(shape, dtype, sharding=None):
+    if sharding is not None:
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: LMConfig, kind: str, batch: int, seq: int) -> Dict[str, Any]:
+    """Abstract input pytree for one step kind.
+
+    train:   full batch with targets
+    prefill: prompt only
+    decode:  one new token (seq == S_max of the existing cache)
+    """
+    s = 1 if kind == "decode" else seq
+    out: Dict[str, Any] = {}
+    if cfg.external_embed:
+        out["embeds"] = _sds((batch, s, cfg.d_model), cfg.cdtype)
+    else:
+        out["tokens"] = _sds((batch, s), jnp.int32)
+    if cfg.pos == "mrope":
+        out["position_ids"] = _sds((3, batch, s), jnp.int32)
+    if kind == "train":
+        out["targets"] = _sds((batch, seq), jnp.int32)
+    return out
+
+
+def concrete_batch(
+    cfg: LMConfig, kind: str, batch: int, seq: int, seed: int = 0
+) -> Dict[str, Any]:
+    """Deterministic synthetic batch with the same pytree as batch_struct."""
+    rng = np.random.default_rng(seed)
+    s = 1 if kind == "decode" else seq
+    out: Dict[str, Any] = {}
+    if cfg.external_embed:
+        out["embeds"] = jnp.asarray(
+            rng.normal(size=(batch, s, cfg.d_model)).astype(np.float32),
+            cfg.cdtype,
+        )
+    else:
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, s)), jnp.int32
+        )
+    if cfg.pos == "mrope":
+        out["position_ids"] = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, None], (3, batch, s)
+        )
+    if kind == "train":
+        out["targets"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(batch, seq)), jnp.int32
+        )
+    return out

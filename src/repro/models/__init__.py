@@ -1,0 +1,3 @@
+"""Model zoo: composable block algebra covering all 10 assigned archs."""
+from . import attention, common, config, lm, mamba, moe  # noqa: F401
+from .config import LMConfig  # noqa: F401

@@ -1,0 +1,332 @@
+"""Attention mixers: chunked-flash GQA (online softmax, O(chunk^2) memory)
+and DeepSeek-style MLA (low-rank Q/KV, absorbed decode).
+
+Layouts: activations are (B, S, H, hd); caches are (B, S_max, Hk, hd)
+(GQA) or (B, S_max, r_kv)/(B, S_max, d_rope) (MLA compressed cache —
+the whole point of MLA).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+from . import common
+from .common import apply_mrope, apply_rope, dense, dense_init
+
+NEG_INF = -1e30
+
+
+# =============================== chunked flash ===============================
+def flash_attention(
+    q: jnp.ndarray,            # (B, Sq, H, hd)
+    k: jnp.ndarray,            # (B, Sk, Hk, hd)
+    v: jnp.ndarray,            # (B, Sk, Hk, hdv)
+    q_offset=0,                # global position of q[0] (causal masking)
+    kv_valid: Optional[jnp.ndarray] = None,   # number of valid kv positions
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+) -> jnp.ndarray:
+    B, Sq, H, hd = q.shape
+    _, Sk, Hk, hdv = v.shape
+    G = H // Hk
+    scale = 1.0 / math.sqrt(q.shape[-1])
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # Pad both sequence dims up to chunk multiples; padded KV is masked
+    # out via kv_valid, padded Q rows are sliced off the output.
+    Sq_p = -(-Sq // q_chunk) * q_chunk
+    Sk_p = -(-Sk // kv_chunk) * kv_chunk
+    if Sk_p != Sk:
+        kv_valid = jnp.minimum(
+            Sk if kv_valid is None else kv_valid, Sk
+        )
+        k = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    if Sq_p != Sq:
+        q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    nq, nk = Sq_p // q_chunk, Sk_p // kv_chunk
+
+    qg = (q * scale).reshape(B, nq, q_chunk, Hk, G, hd).swapaxes(0, 1)
+    kg = k.reshape(B, nk, kv_chunk, Hk, hd).swapaxes(0, 1)
+    vg = v.reshape(B, nk, kv_chunk, Hk, hdv).swapaxes(0, 1)
+
+    kpos_base = jnp.arange(kv_chunk)
+    qpos_base = jnp.arange(q_chunk)
+
+    def attend_q_chunk(qi, qc, kg_use, vg_use):
+        """One q chunk against kv chunks [0, kg_use.shape[0])."""
+        qpos = q_offset + qi * q_chunk + qpos_base      # (qc,)
+
+        def kv_body(carry, kx):
+            m, l, o = carry
+            kj, kc, vc = kx
+            s = jnp.einsum(
+                "bqhgd,bchd->bhgqc", qc, kc,
+                preferred_element_type=jnp.float32,
+            )                                           # (B, Hk, G, qc, kc)
+            kpos = kj * kv_chunk + kpos_base
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if kv_valid is not None:
+                mask &= kpos[None, :] < kv_valid
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # NB: fully-masked rows have s == m_new == NEG_INF; the explicit
+            # re-mask keeps exp(0) == 1 from leaking into l/o.
+            p = jnp.where(
+                mask[None, None, None], jnp.exp(s - m_new[..., None]), 0.0
+            )
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bhgqc,bchd->bqhgd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            o_new = o * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hk, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hk, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, q_chunk, Hk, G, hdv), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_body, (m0, l0, o0),
+            (jnp.arange(kg_use.shape[0]), kg_use, vg_use),
+        )
+        denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        # Cast to the output dtype *inside* the q-chunk body: the scan then
+        # stacks bf16 chunks instead of f32 + a full-stack convert after
+        # (2x stacked-buffer traffic, §Perf iteration I4).
+        return (o / denom).astype(v.dtype)
+
+    if causal and 1 < nq <= 16 and isinstance(q_offset, int) and q_offset == 0:
+        # Causal chunk skipping (§Perf I7): q chunk qi only attends kv
+        # chunks 0..qi.  Unrolling the q loop lets each inner scan stop at
+        # the diagonal — ~2x less attention compute/traffic than masking
+        # all nk chunks.  Only worth the HLO-size cost for small nq.
+        outs = []
+        for qi in range(nq):
+            # last q position in this chunk is (qi+1)*q_chunk - 1; it may
+            # attend kv positions <= itself -> chunks [0, ceil(.../kc)).
+            k_hi = min(-(-((qi + 1) * q_chunk) // kv_chunk), nk)
+            k_hi = max(k_hi, 1)
+            outs.append(attend_q_chunk(qi, qg[qi], kg[:k_hi], vg[:k_hi]))
+        out = jnp.stack(outs, 0).swapaxes(0, 1).reshape(B, Sq_p, H, hdv)
+        return out[:, :Sq]
+
+    def q_body(_, qx):
+        qi, qc = qx
+        return None, attend_q_chunk(qi, qc, kg, vg)
+
+    _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qg))
+    out = out.swapaxes(0, 1).reshape(B, Sq_p, H, hdv)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, 1, H, hd)
+    k_cache: jnp.ndarray,      # (B, S_max, Hk, hd)
+    v_cache: jnp.ndarray,      # (B, S_max, Hk, hdv)
+    pos,                       # scalar: current length (q is at index pos)
+) -> jnp.ndarray:
+    B, _, H, hd = q.shape
+    _, S, Hk, hdv = v_cache.shape
+    G = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, Hk, G, hd)
+    s = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    mask = jnp.arange(S) <= pos
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, 1, H, hdv)
+
+
+# ================================= GQA =======================================
+def gqa_init(key, cfg, dtype):
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype, cfg.qkv_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv * hd, dtype, cfg.qkv_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv * hd, dtype, cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype, False),
+    }
+
+
+def _positions(cfg, B, S, offset, position_ids):
+    if position_ids is not None:
+        return position_ids
+    pos = jnp.arange(S)[None, :] + offset
+    if cfg.pos == "mrope":
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return jnp.broadcast_to(pos, (B, S))
+
+
+def gqa_qkv(p, x, cfg, offset=0, position_ids=None):
+    B, S, _ = x.shape
+    hd = cfg.head_dim or cfg.d_model // cfg.n_heads
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv, hd)
+    pos = _positions(cfg, B, S, offset, position_ids)
+    if cfg.pos == "rope":
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, pos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, pos, cfg.mrope_sections, cfg.rope_theta)
+    q = shard_act(q, ("batch", None, "heads", None))
+    k = shard_act(k, ("batch", None, "kv_heads", None))
+    v = shard_act(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def gqa_apply_train(p, x, cfg, position_ids=None):
+    q, k, v = gqa_qkv(p, x, cfg, 0, position_ids)
+    o = flash_attention(
+        q, k, v, causal=True, q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv
+    )
+    B, S = x.shape[:2]
+    o = shard_act(o, ("batch", None, "heads", None))
+    return dense(p["wo"], o.reshape(B, S, -1).astype(x.dtype)), (k, v)
+
+
+def gqa_apply_decode(p, x, cfg, cache, pos, position_ids=None):
+    """cache: dict(k=(B, S_max, Hk, hd), v=...); x: (B, 1, D)."""
+    q, k, v = gqa_qkv(p, x, cfg, pos, position_ids)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos)
+    B = x.shape[0]
+    y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ================================= MLA =======================================
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+def mla_init(key, cfg, dtype):
+    m: MLAConfig = cfg.mla
+    H = cfg.n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "q_a": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype),
+        "q_norm": common.norm_init(m.q_lora_rank, "rms", dtype),
+        "q_b": dense_init(
+            ks[1], m.q_lora_rank, H * (m.qk_nope_dim + m.qk_rope_dim), dtype
+        ),
+        "kv_a": dense_init(
+            ks[2], cfg.d_model, m.kv_lora_rank + m.qk_rope_dim, dtype
+        ),
+        "kv_norm": common.norm_init(m.kv_lora_rank, "rms", dtype),
+        "kv_b": dense_init(
+            ks[3], m.kv_lora_rank, H * (m.qk_nope_dim + m.v_head_dim), dtype
+        ),
+        "wo": dense_init(ks[4], H * m.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def _mla_q(p, x, cfg, offset):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    cq = common.norm_apply(p["q_norm"], dense(p["q_a"], x), "rms")
+    q = dense(p["q_b"], cq).reshape(B, S, H, m.qk_nope_dim + m.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    pos = jnp.arange(S)[None, :] + offset
+    q_rope = apply_rope(q_rope, jnp.broadcast_to(pos, (B, S)), cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg, offset):
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    a = dense(p["kv_a"], x)
+    c_kv, k_rope = jnp.split(a, [m.kv_lora_rank], axis=-1)
+    c_kv = common.norm_apply(p["kv_norm"], c_kv, "rms")
+    pos = jnp.arange(S)[None, :] + offset
+    k_rope = apply_rope(
+        k_rope[:, :, None, :], jnp.broadcast_to(pos, (B, S)), cfg.rope_theta
+    )[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply_train(p, x, cfg, position_ids=None):
+    """Prefill/train MLA: reconstruct per-head K/V from the compressed
+    cache, chunked-flash attention over (nope+rope) keys."""
+    m: MLAConfig = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, 0)
+    c_kv, k_rope = _mla_ckv(p, x, cfg, 0)
+
+    kvb = dense(p["kv_b"], c_kv).reshape(B, S, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, m.qk_rope_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = shard_act(q, ("batch", None, "heads", None))
+    k = shard_act(k, ("batch", None, "heads", None))
+    v = shard_act(v, ("batch", None, "heads", None))
+    o = flash_attention(
+        q, k, v, causal=True, q_chunk=cfg.attn_chunk_q, kv_chunk=cfg.attn_chunk_kv
+    )
+    y = dense(p["wo"], o.reshape(B, S, -1).astype(x.dtype))
+    return y, (c_kv, k_rope)
+
+
+def mla_apply_decode(p, x, cfg, cache, pos):
+    """Absorbed MLA decode: scores/context computed in the compressed
+    c_kv space — the cache stays (B, S, r_kv) + (B, S, d_rope)."""
+    m: MLAConfig = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, pos)           # (B,1,H,dn),(B,1,H,dr)
+    c_new, kr_new = _mla_ckv(p, x, cfg, pos)          # (B,1,rkv),(B,1,dr)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+    )
+    krope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+    )
+
+    w_kv_b = p["kv_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+    w_uk = w_kv_b[:, :, : m.qk_nope_dim]              # (rkv, H, dn)
+    w_uv = w_kv_b[:, :, m.qk_nope_dim:]               # (rkv, H, dv)
+
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (
+        jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
+    ) * scale                                          # (B,H,1,S)
+    S_max = ckv.shape[1]
+    mask = jnp.arange(S_max) <= pos
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))
+    o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+    y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
+    return y, {"c_kv": ckv, "k_rope": krope}

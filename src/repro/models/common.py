@@ -1,0 +1,179 @@
+"""Shared model building blocks: norms, positions, FFNs, init helpers.
+
+Pure-functional style: every module is an ``init(key, ...) -> params``
+plus an ``apply(params, x, ...)`` pair operating on plain dict pytrees.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# --- norms -------------------------------------------------------------------
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_apply(p, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --- rotary positions ----------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,   # (3, ..., S) — temporal / height / width ids
+    sections,                 # e.g. (16, 24, 24); sums to head_dim // 2
+    theta: float,
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the rotary half-dims are partitioned into
+    3 sections, each rotated by its own position stream."""
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    # Section id per rotary channel.
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=hd // 2
+    )
+    # positions: (3, ..., S) -> per-channel positions (..., S, hd/2)
+    pos = jnp.moveaxis(positions, 0, -1)                          # (..., S, 3)
+    pos_c = jnp.take_along_axis(
+        pos.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, pos.shape[:-1] + (hd // 2,)).astype(jnp.int32),
+        axis=-1,
+    )                                                             # (..., S, hd/2)
+    ang = pos_c * inv
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """MusicGen-style fixed sinusoidal embeddings; positions (..., S)."""
+    half = d_model // 2
+    freq = jnp.exp(
+        -math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# --- feed-forward ---------------------------------------------------------------
+def ffn_init(key, d_model: int, d_ff: int, act: str, dtype, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype, bias)}
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[1], d_model, d_ff, dtype, bias)
+    p["w_down"] = dense_init(ks[2], d_ff, d_model, dtype, bias)
+    return p
+
+
+def ffn_apply(p, x, act: str):
+    up = dense(p["w_up"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["w_gate"], x)) * up
+    elif act == "gelu":
+        h = jax.nn.gelu(up)
+    else:  # pragma: no cover
+        raise ValueError(act)
+    h = shard_act(h, ("batch", None, "ff"))
+    return dense(p["w_down"], h)
+
+
+def softmax_xent_chunked(
+    logits_fn,
+    h: jnp.ndarray,              # (B, S, D) final hidden states
+    targets: jnp.ndarray,        # (B, S) int32
+    mask: Optional[jnp.ndarray],
+    chunk: int = 0,
+):
+    """Cross-entropy over a (possibly huge) vocab without materializing the
+    full (B, S, V) logits: scan over sequence chunks.  ``logits_fn`` maps
+    (B, C, D) -> (B, C, V)."""
+    B, S, D = h.shape
+    if chunk <= 0 or S % chunk != 0 or S == chunk:
+        logits = logits_fn(h)
+        return _xent(logits, targets, mask)
+
+    n = S // chunk
+    hs = h.reshape(B, n, chunk, D).swapaxes(0, 1)          # (n, B, C, D)
+    ts = targets.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = None if mask is None else mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        if ms is None:
+            hc, tc = xs
+            mc = None
+        else:
+            hc, tc, mc = xs
+        loss, weight = _xent(logits_fn(hc), tc, mc, reduce=False)
+        return (tot + loss, cnt + weight), None
+
+    xs = (hs, ts) if ms is None else (hs, ts, ms)
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), xs)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _xent(logits, targets, mask, reduce: bool = True):
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    tot = jnp.sum(nll * mask)
+    cnt = jnp.sum(mask)
+    if reduce:
+        return tot / jnp.maximum(cnt, 1.0)
+    return tot, cnt

@@ -1,0 +1,305 @@
+"""LM assembly: Embed -> scan(blocks) -> Norm -> Head, with train / prefill
+/ decode entry points for every assigned architecture.
+
+Layers are scanned in groups of ``cfg.scan_period()`` (1 for uniform
+stacks; 8 for Jamba's 1-attn:7-mamba interleave) so the HLO stays small
+at 61-80 layers.  Activation remat wraps each scanned group.  Sequence
+parallelism is annotated on the residual stream between blocks
+(``shard_act(x, ("batch", "seq_sp", None))``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_act
+from . import attention as attn
+from . import common, mamba as ssm, moe as moe_mod
+from .common import dense, dense_init, norm_apply, norm_init
+from .config import LMConfig
+
+
+# ------------------------------- init ---------------------------------------
+def _init_mixer(key, cfg: LMConfig, kind: str):
+    if kind == "gqa":
+        return attn.gqa_init(key, cfg, cfg.pdtype)
+    if kind == "mla":
+        return attn.mla_init(key, cfg, cfg.pdtype)
+    return ssm.mamba_init(key, cfg, cfg.pdtype)
+
+
+def _init_ffn(key, cfg: LMConfig, kind: str):
+    if kind == "none":
+        return {}
+    if kind == "moe":
+        return moe_mod.moe_init(key, cfg, cfg.pdtype)
+    return common.ffn_init(key, cfg.d_model, cfg.d_ff, cfg.act, cfg.pdtype)
+
+
+def _init_block(key, cfg: LMConfig, mk: str, fk: str):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": norm_init(cfg.d_model, cfg.norm, cfg.pdtype),
+         "mixer": _init_mixer(k1, cfg, mk)}
+    if fk != "none":
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm, cfg.pdtype)
+        p["ffn"] = _init_ffn(k2, cfg, fk)
+    return p
+
+
+def init(key, cfg: LMConfig) -> Dict[str, Any]:
+    cfg.validate()
+    period = cfg.scan_period()
+    groups = cfg.n_layers // period
+    keys = jax.random.split(key, 4)
+
+    blocks = []
+    for pos in range(period):
+        mk, fk = cfg.mixer_kind(pos), cfg.ffn_of(pos)
+        per_group = [
+            _init_block(
+                jax.random.fold_in(keys[0], g * period + pos), cfg, mk, fk
+            )
+            for g in range(groups)
+        ]
+        blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group))
+
+    params: Dict[str, Any] = {"blocks": blocks, "ln_f": norm_init(cfg.d_model, cfg.norm, cfg.pdtype)}
+    if not cfg.external_embed:
+        params["embed"] = {
+            "w": (jax.random.normal(keys[1], (cfg.vocab_size, cfg.d_model)) * 0.02).astype(cfg.pdtype)
+        }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[2], cfg.d_model, cfg.vocab_size, cfg.pdtype)
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": dense_init(keys[3], 2 * cfg.d_model, cfg.d_model, cfg.pdtype),
+            "block": _init_block(
+                jax.random.fold_in(keys[3], 1), cfg, cfg.mixer_kind(0), cfg.ffn_of(0)
+            ),
+            "ln": norm_init(cfg.d_model, cfg.norm, cfg.pdtype),
+        }
+    return params
+
+
+# ------------------------------- blocks ---------------------------------------
+def _block_train(bp, x, cfg: LMConfig, mk: str, fk: str, position_ids, training: bool = True):
+    h = norm_apply(bp["ln1"], x, cfg.norm)
+    aux = jnp.float32(0.0)
+    if mk == "gqa":
+        y, kv = attn.gqa_apply_train(bp["mixer"], h, cfg, position_ids)
+        cacheable = {"k": kv[0], "v": kv[1]}
+    elif mk == "mla":
+        y, kv = attn.mla_apply_train(bp["mixer"], h, cfg, position_ids)
+        cacheable = {"c_kv": kv[0], "k_rope": kv[1]}
+    else:
+        y, cacheable = ssm.mamba_mix(
+            bp["mixer"], h, cfg, cfg.mamba_chunk, return_state=True,
+            training=training,
+        )
+    x = x + y
+    if fk != "none":
+        h2 = norm_apply(bp["ln2"], x, cfg.norm)
+        if fk == "moe":
+            y2, aux = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+        else:
+            y2 = common.ffn_apply(bp["ffn"], h2, cfg.act)
+        x = x + y2
+    x = shard_act(x, ("batch", "seq_sp", None))
+    return x, cacheable, aux
+
+
+def _block_decode(bp, x, cfg: LMConfig, mk: str, fk: str, cache, pos, position_ids):
+    h = norm_apply(bp["ln1"], x, cfg.norm)
+    if mk == "gqa":
+        y, cache = attn.gqa_apply_decode(bp["mixer"], h, cfg, cache, pos, position_ids)
+    elif mk == "mla":
+        y, cache = attn.mla_apply_decode(bp["mixer"], h, cfg, cache, pos)
+    else:
+        y, cache = ssm.mamba_step(bp["mixer"], h, cfg, cache)
+    x = x + y
+    if fk != "none":
+        h2 = norm_apply(bp["ln2"], x, cfg.norm)
+        if fk == "moe":
+            y2, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+        else:
+            y2 = common.ffn_apply(bp["ffn"], h2, cfg.act)
+        x = x + y2
+    return x, cache
+
+
+# ------------------------------ embedding -------------------------------------
+def embed_inputs(params, batch: Dict[str, Any], cfg: LMConfig, offset=0):
+    if cfg.external_embed:
+        x = batch["embeds"].astype(cfg.cdtype)
+    else:
+        x = params["embed"]["w"].astype(cfg.cdtype)[batch["tokens"]]
+    if cfg.pos == "sinusoidal":
+        B, S = x.shape[:2]
+        pos = jnp.arange(S)[None, :] + offset
+        x = x + common.sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
+    return shard_act(x, ("batch", "seq_sp", None))
+
+
+def _head_logits(params, h, cfg: LMConfig):
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["w"].astype(h.dtype).T
+    return dense(params["head"], h)
+
+
+# ------------------------------- forward --------------------------------------
+def forward_hidden(params, x, cfg: LMConfig, position_ids=None, collect_cache=False, training=True):
+    """Scan the block stack; returns (h, stacked cacheables, aux_sum)."""
+    period = cfg.scan_period()
+    kinds = [(cfg.mixer_kind(i), cfg.ffn_of(i)) for i in range(period)]
+
+    def group_body(x, group_params):
+        caches = []
+        aux = jnp.float32(0.0)
+        for pos in range(period):
+            mk, fk = kinds[pos]
+            x, c, a = _block_train(group_params[pos], x, cfg, mk, fk, position_ids, training)
+            caches.append(c)
+            aux = aux + a
+        return x, (tuple(caches), aux)
+
+    if cfg.remat:
+        group_body = jax.checkpoint(group_body)
+
+    def scan_body(x, gp):
+        return group_body(x, gp)
+
+    x, (caches, auxs) = jax.lax.scan(scan_body, x, tuple(params["blocks"]))
+    return x, (caches if collect_cache else None), jnp.sum(auxs)
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: LMConfig):
+    """Training loss: chunked CE + MoE aux (+ MTP branch for DeepSeek)."""
+    x = embed_inputs(params, batch, cfg)
+    pos_ids = batch.get("position_ids")
+    h, _, aux = forward_hidden(params, x, cfg, pos_ids)
+    h = norm_apply(params["ln_f"], h, cfg.norm)
+
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    loss = common.softmax_xent_chunked(
+        lambda hh: _head_logits(params, hh, cfg).astype(jnp.float32),
+        h, targets, mask, cfg.loss_chunk,
+    )
+    metrics = {"ce": loss, "aux": aux}
+    loss = loss + cfg.aux_loss_weight * aux
+
+    if cfg.mtp and not cfg.external_embed:
+        # DeepSeek-style depth-1 MTP: combine h_t with embed(token_{t+1})
+        # to predict token_{t+2} through one extra block.
+        emb = params["embed"]["w"].astype(h.dtype)[batch["tokens"][:, 1:]]
+        comb = jnp.concatenate([h[:, :-1], emb], axis=-1)
+        z = dense(params["mtp"]["proj"], comb)
+        mk, fk = cfg.mixer_kind(0), cfg.ffn_of(0)
+        z, _, _ = _block_train(params["mtp"]["block"], z, cfg, mk, fk, None)
+        z = norm_apply(params["mtp"]["ln"], z, cfg.norm)
+        t2 = targets[:, 1:]
+        m2 = None if mask is None else mask[:, 1:]
+        mtp_loss = common.softmax_xent_chunked(
+            lambda hh: _head_logits(params, hh, cfg).astype(jnp.float32),
+            z, t2, m2, cfg.loss_chunk,
+        )
+        metrics["mtp"] = mtp_loss
+        loss = loss + cfg.mtp_weight * mtp_loss
+
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ----------------------------- caches / serving --------------------------------
+def init_cache(cfg: LMConfig, batch: int, max_len: int):
+    """Abstract-friendly cache pytree matching the scanned block layout."""
+    period = cfg.scan_period()
+    groups = cfg.n_layers // period
+    cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.cache_dtype]
+
+    def one(mk):
+        if mk == "gqa":
+            return {
+                "k": jnp.zeros((groups, batch, max_len, cfg.n_kv, cfg.hd), cdt),
+                "v": jnp.zeros((groups, batch, max_len, cfg.n_kv, cfg.hd), cdt),
+            }
+        if mk == "mla":
+            m = cfg.mla
+            return {
+                "c_kv": jnp.zeros((groups, batch, max_len, m.kv_lora_rank), cdt),
+                "k_rope": jnp.zeros((groups, batch, max_len, m.qk_rope_dim), cdt),
+            }
+        c = ssm.mamba_cache_init(cfg, batch, cdt)
+        return jax.tree.map(
+            lambda a: jnp.zeros((groups,) + a.shape, a.dtype), c
+        )
+
+    return tuple(one(cfg.mixer_kind(pos)) for pos in range(period))
+
+
+def decode_step(params, inputs, pos, caches, cfg: LMConfig):
+    """One decode step: inputs {"tokens": (B,1)} | {"embeds": (B,1,D)};
+    pos = current length (new token written at index pos)."""
+    x = embed_inputs(params, inputs, cfg, offset=pos)
+    period = cfg.scan_period()
+    kinds = [(cfg.mixer_kind(i), cfg.ffn_of(i)) for i in range(period)]
+    pos_ids = inputs.get("position_ids")
+
+    def scan_body(x, xs):
+        gp, gcaches = xs
+        new_caches = []
+        for p_i in range(period):
+            mk, fk = kinds[p_i]
+            x, c = _block_decode(gp[p_i], x, cfg, mk, fk, gcaches[p_i], pos, pos_ids)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(scan_body, x, (tuple(params["blocks"]), caches))
+    h = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = _head_logits(params, h, cfg)
+    return logits, new_caches
+
+
+def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None):
+    """Run the full prompt; returns (caches padded to max_len, last-token
+    logits).  SSM mixers carry O(1) state; attention mixers stack K/V."""
+    x = embed_inputs(params, batch, cfg)
+    S = x.shape[1]
+    B = x.shape[0]
+    max_len = max_len or S
+    pos_ids = batch.get("position_ids")
+    h, caches, _ = forward_hidden(params, x, cfg, pos_ids, collect_cache=True, training=False)
+    h = norm_apply(params["ln_f"], h, cfg.norm)
+    logits = _head_logits(params, h[:, -1:], cfg)
+
+    period = cfg.scan_period()
+    cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.cache_dtype]
+    full = init_cache(cfg, B, max_len)
+    out = []
+    for p_i in range(period):
+        mk = cfg.mixer_kind(p_i)
+        got = caches[p_i]           # stacked over groups, seq dim = S
+        if mk == "gqa":
+            out.append({
+                "k": jax.lax.dynamic_update_slice(
+                    full[p_i]["k"], got["k"].astype(cdt), (0, 0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    full[p_i]["v"], got["v"].astype(cdt), (0, 0, 0, 0, 0)),
+            })
+        elif mk == "mla":
+            out.append({
+                "c_kv": jax.lax.dynamic_update_slice(
+                    full[p_i]["c_kv"], got["c_kv"].astype(cdt), (0, 0, 0, 0)),
+                "k_rope": jax.lax.dynamic_update_slice(
+                    full[p_i]["k_rope"], got["k_rope"].astype(cdt), (0, 0, 0, 0)),
+            })
+        else:
+            # Mamba prefill: the chunked mix returns the exact
+            # post-prompt state {"h", "conv"} per layer.
+            out.append(
+                {"h": got["h"], "conv": got["conv"].astype(cdt)}
+            )
+    return tuple(out), logits

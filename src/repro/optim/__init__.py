@@ -1,0 +1,16 @@
+"""Optimizers + schedules + distributed-optimization tricks (gradient
+compression, factored/quantized moments)."""
+from .adamw import adamw  # noqa: F401
+from .adafactor import adafactor  # noqa: F401
+from .schedule import cosine_warmup  # noqa: F401
+from .grad_compress import compress_decompress, int8_allreduce_grads  # noqa: F401
+
+
+def get_optimizer(name: str, lr, **kw):
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adamw8bit":
+        return adamw(lr, quantize_moments=True, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

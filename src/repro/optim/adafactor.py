@@ -1,0 +1,78 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments — O(n+m)
+optimizer state for an (n, m) weight instead of O(nm).  The default
+optimizer for the 671B-class configs, where full Adam moments would not
+fit the per-device HBM budget (see EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .adamw import Transform
+
+
+def adafactor(
+    lr,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+) -> Transform:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def factored(shape):
+        return (
+            len(shape) >= 2
+            and shape[-1] >= min_dim_size_to_factor
+            and shape[-2] >= min_dim_size_to_factor
+        )
+
+    def init(params):
+        def one(p):
+            if factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"mu": jax.tree.map(one, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** -decay
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                u = (
+                    g
+                    / jnp.sqrt(vr / denom)[..., None]
+                    / jnp.sqrt(vc)[..., None, :]
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            upd = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return upd, new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state["mu"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return treedef.unflatten([o[0] for o in outs]), {
+            "mu": treedef.unflatten([o[1] for o in outs]),
+            "step": step,
+        }
+
+    return Transform(init, update)

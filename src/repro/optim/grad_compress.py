@@ -1,0 +1,114 @@
+"""Int8 gradient compression with error feedback.
+
+For bandwidth-bound data parallelism: a *compressed ring all-reduce* —
+both the reduce-scatter and all-gather phases move int8 payloads (+ per
+block f32 scales, 1/512 overhead) over the wire via ``lax.ppermute``,
+with int32/f32 accumulation on-device and re-quantization at each hop
+(exactly how production compressed rings behave; the re-quantization
+noise is absorbed by error feedback).
+
+ * ``compress_decompress``: pure quantize->dequantize with error feedback
+   (usable under pjit to emulate wire precision anywhere).
+ * ``ring_allreduce_int8``: the shard_map collective.
+ * ``mean_grads_int8``: pytree wrapper used by the trainer's
+   ``grad_compression="int8"`` mode.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+_BLOCK = 512
+
+
+def quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., L) f32 -> int8 payload + per-block f32 scales."""
+    blocks = x.reshape(x.shape[:-1] + (-1, _BLOCK)) if x.shape[-1] % _BLOCK == 0 \
+        else None
+    if blocks is None:
+        pad = (-x.shape[-1]) % _BLOCK
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        blocks = xp.reshape(x.shape[:-1] + (-1, _BLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, length: int) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(q.shape[:-2] + (-1,))
+    return flat[..., :length]
+
+
+def compress_decompress(g: jnp.ndarray, err: jnp.ndarray):
+    """Quantize+dequantize with error feedback; returns (g_hat, new_err)."""
+    corrected = (g.astype(jnp.float32) + err).reshape(-1)
+    q, s = quantize(corrected)
+    deq = dequantize(q, s, corrected.size).reshape(g.shape)
+    return deq.astype(g.dtype), (corrected.reshape(g.shape) - deq)
+
+
+def ring_allreduce_int8(x: jnp.ndarray, axis: str, n: int) -> jnp.ndarray:
+    """Compressed ring all-reduce (sum) of a flat f32 vector over ``axis``.
+    Wire traffic is int8 payload + f32 block scales in both phases."""
+    if n == 1:
+        return x
+    L = -(-x.size // n)
+    xp = jnp.pad(x.reshape(-1), (0, n * L - x.size)).reshape(n, L)
+    rank = lax.axis_index(axis)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+
+    def hop(chunk_f32):
+        q, s = quantize(chunk_f32)
+        q = lax.ppermute(q, axis, fwd)
+        s = lax.ppermute(s, axis, fwd)
+        return dequantize(q, s, L)
+
+    # Phase 1: reduce-scatter.  After n-1 hops, chunk (rank+1) mod n on
+    # each device holds the full sum.
+    def rs_body(step, acc):
+        idx_send = (rank - step) % n
+        got = hop(lax.dynamic_index_in_dim(acc, idx_send, keepdims=False))
+        idx_recv = (rank - step - 1) % n
+        upd = lax.dynamic_index_in_dim(acc, idx_recv, keepdims=False) + got
+        return lax.dynamic_update_index_in_dim(acc, upd, idx_recv, 0)
+
+    acc = lax.fori_loop(0, n - 1, rs_body, xp)
+
+    # Phase 2: all-gather the reduced chunks (int8 on the wire).
+    def ag_body(step, acc):
+        idx_send = (rank + 1 - step) % n
+        got = hop(lax.dynamic_index_in_dim(acc, idx_send, keepdims=False))
+        idx_recv = (rank - step) % n
+        return lax.dynamic_update_index_in_dim(acc, got, idx_recv, 0)
+
+    acc = lax.fori_loop(0, n - 1, ag_body, acc)
+    return acc.reshape(-1)[: x.size].reshape(x.shape)
+
+
+def mean_grads_int8(grads, errors, axis: str, n: int):
+    """Pytree compressed-mean with error feedback; shard_map body."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        summed = ring_allreduce_int8(corrected, axis, n) / n
+        # Error feedback vs what this device injected into the wire.
+        q, s = quantize(corrected.reshape(-1))
+        deq = dequantize(q, s, corrected.size).reshape(g.shape)
+        return summed.astype(g.dtype), corrected - deq
+
+    flat_g, td = jax.tree.flatten(grads)
+    flat_e = td.flatten_up_to(errors)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return td.unflatten([o[0] for o in outs]), td.unflatten([o[1] for o in outs])
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), params)
+
+
+def int8_allreduce_grads(grads, errors, axis: str):  # pragma: no cover - alias
+    n = jax.lax.axis_size(axis)
+    return mean_grads_int8(grads, errors, axis, n)

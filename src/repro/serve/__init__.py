@@ -1,0 +1,1 @@
+from .engine import Engine, GenerationResult, bucket_requests  # noqa: F401

@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + decode with KV/SSM caches.
+
+Requests are grouped into equal-prompt-length batches (length bucketing);
+generation is greedy or temperature sampling.  DCIM-numerics execution of
+linear layers (the bridge to the paper's compiler) lives in
+``repro.sim.functional`` and is validated against this engine's float
+path in tests/test_dcim_sim.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import LMConfig
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray           # (B, prompt + generated)
+    prompt_len: int
+    steps: int
+
+
+class Engine:
+    def __init__(self, cfg: LMConfig, params, max_len: int = 512):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._decode = jax.jit(
+            partial(lm.decode_step, cfg=cfg), static_argnames=()
+        )
+        self._prefill = jax.jit(
+            lambda p, b: lm.prefill(p, b, cfg, max_len=max_len)
+        )
+
+    def generate(
+        self,
+        prompts: np.ndarray,            # (B, P) int32, equal lengths
+        n_tokens: int = 32,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> GenerationResult:
+        B, P = prompts.shape
+        assert P + n_tokens <= self.max_len
+        caches, logits = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
+        key = jax.random.PRNGKey(seed)
+        out = [jnp.asarray(prompts)]
+        cur = self._sample(logits[:, -1], key, temperature)
+        for t in range(n_tokens):
+            out.append(cur[:, None])
+            logits, caches = self._decode(
+                self.params, {"tokens": cur[:, None]}, P + t, caches
+            )
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits[:, -1], sub, temperature)
+        tokens = np.asarray(jnp.concatenate(out, axis=1))
+        return GenerationResult(tokens=tokens, prompt_len=P, steps=n_tokens)
+
+    @staticmethod
+    def _sample(logits, key, temperature):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+def bucket_requests(prompt_lists: List[List[int]]):
+    """Group variable-length prompts into equal-length batches."""
+    buckets = {}
+    for i, p in enumerate(prompt_lists):
+        buckets.setdefault(len(p), []).append((i, p))
+    out = []
+    for plen, items in sorted(buckets.items()):
+        idx = [i for i, _ in items]
+        arr = np.asarray([p for _, p in items], np.int32)
+        out.append((idx, arr))
+    return out

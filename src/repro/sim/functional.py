@@ -1,0 +1,107 @@
+"""DCIM functional simulator: execute real MVM workloads *as the
+generated macro would*, bit-exactly, with cycle/energy accounting from
+the cost model.
+
+``DCIMMacroSim`` wraps one explored design point:
+
+  * ``mvm(x, w)`` — integer path: per-tensor symmetric quantization to
+    B_x/B_w bits, exact bit-serial MAC (kernels.dcim_mvm), dequantize.
+  * ``mvm_fp(x, w)`` — pre-aligned block-FP path (kernels.dcim_fp_matmul)
+    with group height H from the design.
+  * ``account(M, K, N)`` — cycles / latency / energy for that workload on
+    this macro (tiling over N columns x H rows, B_x/k cycles per pass),
+    which is what the dcimmap layer aggregates per architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cells import CALIBRATED, TechParams, TSMC28
+from repro.core.explorer import ParetoPoint
+from repro.core.macros import macro_costs, physical
+from repro.core.precision import Precision, get as get_precision
+from repro.kernels import ops
+
+
+def quantize_sym(x, bits: int):
+    """Per-tensor symmetric quantization -> (int32 codes, scale)."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    qmax = 2 ** (bits - 1) - 1
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    return q, scale
+
+
+@dataclasses.dataclass
+class DCIMMacroSim:
+    precision: Precision
+    N: int
+    H: int
+    L: int
+    k: int
+    tech: TechParams = CALIBRATED
+    activity: float = 1.0
+
+    @classmethod
+    def from_point(cls, p: ParetoPoint, **kw) -> "DCIMMacroSim":
+        return cls(precision=get_precision(p.precision), N=p.N, H=p.H, L=p.L,
+                   k=p.k, **kw)
+
+    @property
+    def w_store(self) -> int:
+        return self.N * self.H * self.L // self.precision.B_w
+
+    # --- numerics -----------------------------------------------------------
+    def mvm(self, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """Integer DCIM execution of y = x @ w (float in/out)."""
+        p = self.precision
+        assert not p.is_fp
+        qx, sx = quantize_sym(x, p.B_x)
+        qw, sw = quantize_sym(w, p.B_w)
+        y = ops.dcim_mvm(qx, qw, B_x=p.B_x, B_w=p.B_w, k=self.k)
+        return y.astype(jnp.float32) * (sx * sw)
+
+    def mvm_fp(self, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """Pre-aligned block-FP DCIM execution (group height = H)."""
+        p = self.precision
+        assert p.is_fp
+        K = x.shape[-1]
+        H = math.gcd(self.H, K)
+        return ops.dcim_fp_matmul(x, w, H=H, B_M=p.B_M, B_w=p.B_w, k=self.k)
+
+    def __call__(self, x, w):
+        return self.mvm_fp(x, w) if self.precision.is_fp else self.mvm(x, w)
+
+    # --- cost accounting ------------------------------------------------------
+    def account(self, M: int, K: int, N_out: int) -> dict:
+        """Latency/energy for an (M, K) x (K, N_out) MVM stream on this
+        macro.  The array holds H*L rows x (N/B_w) weight columns per
+        load; weights are streamed in tiles; inputs take ceil(B_x/k)
+        cycles per row-pass (the paper's throughput model)."""
+        p = self.precision
+        costs = macro_costs(
+            float(self.N), float(self.H), float(self.L), float(self.k), p, TSMC28
+        )
+        phys = physical(costs, self.tech, self.activity)
+        cols_per_load = self.N // p.B_w          # output channels resident
+        rows_per_pass = self.H                   # reduction rows per pass
+        passes_k = math.ceil(K / rows_per_pass)
+        loads_n = math.ceil(N_out / (cols_per_load * self.L))
+        cycles_per_pass = math.ceil(p.B_x / self.k)
+        total_cycles = M * passes_k * loads_n * cycles_per_pass * self.L
+        delay_ns = float(np.asarray(phys.delay_ns))
+        energy_nJ = float(np.asarray(phys.energy_nJ))
+        lat_ns = total_cycles * delay_ns
+        return {
+            "cycles": int(total_cycles),
+            "latency_us": lat_ns * 1e-3,
+            "energy_uJ": total_cycles * energy_nJ * 1e-3,
+            "macs": M * K * N_out,
+            "tops_effective": (2.0 * M * K * N_out) / max(lat_ns, 1e-9) * 1e-3,
+            "weight_loads": loads_n * passes_k,
+        }

@@ -1,0 +1,3 @@
+from . import checkpoint  # noqa: F401
+from .train_step import build, init_state, make_train_step  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,141 @@
+"""Generator tests: netlist census == analytic census == cost-model area;
+floorplan geometry consistency; file emission."""
+import json
+import math
+import pathlib
+
+import pytest
+
+from repro.codegen import DcimDesign, design_from_point, generate, generate_netlists
+from repro.codegen import audit as audit_mod
+from repro.codegen.floorplan import floorplan
+from repro.core.cells import TSMC28
+
+
+DESIGNS = [
+    dict(precision="int2", w_store=4096, N=16, H=64, L=8, k=1),
+    dict(precision="int8", w_store=8192, N=64, H=128, L=8, k=4),
+    dict(precision="int8", w_store=65536, N=128, H=512, L=8, k=8),
+    dict(precision="int16", w_store=16384, N=128, H=256, L=8, k=4),
+    dict(precision="fp8", w_store=8192, N=32, H=128, L=8, k=2),
+    dict(precision="bf16", w_store=8192, N=64, H=128, L=16, k=4),
+    dict(precision="fp16", w_store=16384, N=88, H=256, L=8, k=8),
+    dict(precision="fp32", w_store=65536, N=192, H=1024, L=8, k=8),
+]
+
+
+@pytest.mark.parametrize("spec", DESIGNS, ids=lambda s: f"{s['precision']}-{s['w_store']}")
+class TestCensusAudit:
+    def test_emitted_census_matches_analytic(self, spec):
+        d = design_from_point(spec)
+        net = generate_netlists(d)
+        audit = audit_mod.audit(d, net["census"])
+        assert audit["census_match"], audit["mismatches"]
+
+    def test_census_area_matches_cost_model(self, spec):
+        d = design_from_point(spec)
+        net = generate_netlists(d)
+        audit = audit_mod.audit(d, net["census"])
+        tol = 0.01 if d.is_fp else 1e-5
+        assert audit["area_rel_err"] < tol, audit
+
+    def test_printed_model_without_selection_mux(self, spec):
+        d = design_from_point(spec, include_selection_mux=False)
+        net = generate_netlists(d)
+        audit = audit_mod.audit(d, net["census"])
+        assert audit["census_match"], audit["mismatches"]
+        assert audit["area_rel_err"] < (0.01 if d.is_fp else 1e-5)
+
+
+class TestStructure:
+    def test_sram_count_is_exact(self):
+        d = design_from_point(DESIGNS[1])
+        net = generate_netlists(d)
+        assert net["census"]["SRAM"] == d.N * d.H * d.L
+        assert d.N * d.H * d.L == d.w_store * d.B_w
+
+    def test_fp_has_prealign_and_converter(self):
+        d = design_from_point(DESIGNS[5])
+        net = generate_netlists(d)
+        assert "fp_prealign.v" in net["files"]
+        assert "int2fp.v" in net["files"]
+
+    def test_int_has_no_fp_blocks(self):
+        d = design_from_point(DESIGNS[1])
+        net = generate_netlists(d)
+        assert "fp_prealign.v" not in net["files"]
+
+    def test_verilog_is_balanced(self):
+        d = design_from_point(DESIGNS[1])
+        net = generate_netlists(d)
+        for name, text in net["files"].items():
+            opens = sum(
+                1 for ln in text.splitlines() if ln.lstrip().startswith("module ")
+            )
+            closes = sum(
+                1 for ln in text.splitlines() if ln.strip() == "endmodule"
+            )
+            assert opens == closes >= 1, (name, opens, closes)
+
+    def test_mux_tree_count_matches_table2(self):
+        """N:1 mux == N-1 MUX2 for power-of-two N."""
+        from repro.codegen.templates import Netlist
+
+        for N in (2, 4, 8, 16, 64):
+            n = Netlist("t")
+            n.w("module t;")
+            n.mux_n1(N, [f"i{j}" for j in range(N)], "s", "y")
+            assert n.counts["MUX2"] == N - 1
+
+    def test_barrel_shifter_count_matches_table2(self):
+        from repro.codegen.templates import Netlist
+
+        for N in (2, 4, 8):
+            n = Netlist("t")
+            n.barrel_shifter(N, "a", "sh", "y")
+            assert n.counts["MUX2"] == N * (N - 1)
+
+
+class TestFloorplan:
+    def test_blocks_cover_die(self):
+        d = design_from_point(DESIGNS[1])
+        plan = floorplan(d)
+        s = plan["summary"]
+        covered = sum(b.area_um2 for b in plan["blocks"])
+        die = s["die_w_um"] * s["die_h_um"]
+        assert covered == pytest.approx(die, rel=1e-6)
+
+    def test_die_area_equals_cell_area_over_utilization(self):
+        d = design_from_point(DESIGNS[5])
+        plan = floorplan(d, utilization=0.7)
+        s = plan["summary"]
+        assert s["die_area_mm2"] == pytest.approx(s["cell_area_mm2"] / 0.7, rel=1e-6)
+
+    def test_no_overlaps(self):
+        d = design_from_point(dict(precision="bf16", w_store=4096, N=16, H=64, L=32, k=2))
+        plan = floorplan(d)
+        bs = plan["blocks"]
+        for i in range(len(bs)):
+            for j in range(i + 1, len(bs)):
+                a, b = bs[i], bs[j]
+                overlap_w = min(a.x_um + a.w_um, b.x_um + b.w_um) - max(a.x_um, b.x_um)
+                overlap_h = min(a.y_um + a.h_um, b.y_um + b.h_um) - max(a.y_um, b.y_um)
+                assert overlap_w <= 1e-6 or overlap_h <= 1e-6, (a.name, b.name)
+
+
+class TestEndToEnd:
+    def test_generate_writes_everything(self, tmp_path):
+        rep = generate(DESIGNS[1], tmp_path)
+        assert (tmp_path / "rtl" / "dcim_macro.v").exists()
+        assert (tmp_path / "rtl" / "cell_lib.v").exists()
+        assert (tmp_path / "floorplan.def").exists()
+        loaded = json.loads((tmp_path / "report.json").read_text())
+        assert loaded["audit"]["ok"]
+
+    def test_generate_from_explorer_point(self, tmp_path):
+        from repro.core import explore
+        from repro.core.nsga2 import NSGA2Config
+
+        pts = explore("int8", 4096, NSGA2Config(pop_size=32, generations=12))
+        rep = generate(pts[0], tmp_path)
+        assert rep["audit"]["census_match"]

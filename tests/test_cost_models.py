@@ -1,0 +1,174 @@
+"""Unit tests for the paper's cost models (Tables II-VI), vs hand-computed
+values from the printed formulas, plus structural identities."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import components as c
+from repro.core import macros, modules as m, precision
+from repro.core.cells import CellLibrary, TSMC28
+
+A = pytest.approx
+
+
+def f(x):
+    return float(np.asarray(x))
+
+
+class TestModules:
+    def test_adder(self):
+        assert f(m.add_area(4)) == A(3 * 5.7 + 4.3)
+        assert f(m.add_delay(4)) == A(3 * 3.3 + 2.5)
+        assert f(m.add_energy(4)) == A(3 * 8.4 + 6.9)
+
+    def test_mux(self):
+        assert f(m.sel_area(4)) == A(3 * 2.2)
+        assert f(m.sel_delay(4)) == A(2 * 2.2)
+        assert f(m.sel_energy(4)) == A(3 * 3.0)
+
+    def test_shifter_as_printed(self):
+        # A_shift(N) = N*A_sel(N);  D_shift(N) = log2(N)*D_sel(N)
+        assert f(m.shift_area(4)) == A(4 * 3 * 2.2)
+        assert f(m.shift_delay(4)) == A(2 * (2 * 2.2))
+        assert f(m.shift_energy(4)) == A(4 * 3 * 3.0)
+
+    def test_shifter_mux_tree_variant(self):
+        lib = CellLibrary(shifter_delay_model="mux_tree")
+        assert f(m.shift_delay(4, lib)) == A(2 * 2.2)
+
+    def test_multiplier(self):
+        assert f(m.mul_area(8)) == A(8.0)
+        assert f(m.mul_delay(8)) == A(1.0)
+
+    def test_comparator_equals_adder(self):
+        for n in (2, 4, 8):
+            assert f(m.comp_area(n)) == f(m.add_area(n))
+            assert f(m.comp_delay(n)) == f(m.add_delay(n))
+
+
+class TestComponents:
+    def test_adder_tree_h4_k2(self):
+        # level0: A_add(2)*H/2, level1: A_add(3)*H/4
+        assert f(c.tree_area(4, 2)) == A((5.7 + 4.3) * 2 + (2 * 5.7 + 4.3) * 1)
+        assert f(c.tree_delay(4, 2)) == A((3.3 + 2.5) + (2 * 3.3 + 2.5))
+
+    def test_accumulator_bx4_h4(self):
+        B = 6
+        assert f(c.accu_area(4, 4)) == A(B * 6.6 + B * (B - 1) * 2.2 + (B - 1) * 5.7 + 4.3)
+
+    def test_fusion_bw4_bx4_h4(self):
+        w = 4 + 2  # B_x + log2 H
+        assert f(c.fusion_area(4, 4, 4)) == A(3 * (w - 1) * 5.7 + (4 + w - 1) * 4.3)
+        assert f(c.fusion_delay(4, 4, 4)) == A((w - 1) * 2.5 + 3 * 3.3)
+
+    def test_align_h4(self):
+        assert f(c.align_area(4, 4, 4)) == A(3 * f(m.comp_area(4)) + 4 * f(m.shift_area(4)))
+        assert f(c.align_delay(4, 4, 4)) == A(
+            max(2 * f(m.comp_delay(4)), f(m.shift_delay(4)))
+        )
+
+    def test_convert_br10(self):
+        # B_r = 4+4+2 = 10, levels ceil(log2 10)=4, real halving
+        per = 0.0
+        br = 10.0
+        for l in range(1, 5):
+            frac = br / 2**l
+            per += max(frac - 1, 0) * 1.3 + frac * 2.2
+        per += f(m.add_area(4))
+        assert f(c.convert_area(16, 4, 4, br)) == A(16 / 4 * per, rel=1e-5)
+
+    def test_tree_vectorized_matches_scalar(self):
+        H = jnp.array([4.0, 16.0, 256.0])
+        k = jnp.array([2.0, 1.0, 8.0])
+        vec = np.asarray(c.tree_area(H, k))
+        for i in range(3):
+            assert vec[i] == A(f(c.tree_area(H[i], k[i])))
+
+
+class TestMacros:
+    def test_int_macro_assembly(self):
+        N, H, L, k, Bw, Bx = 64.0, 128.0, 16.0, 4.0, 8.0, 8.0
+        mc = macros.int_macro(N, H, L, k, Bw, Bx)
+        # Table V identities
+        assert f(mc.area) == A(
+            N * H * L * 2.2
+            + N * H * k * 1.0
+            + N * f(c.tree_area(H, k))
+            + N * f(c.accu_area(Bx, H))
+            + N / Bw * f(c.fusion_area(Bw, Bx, H)),
+            rel=1e-5,
+        )
+        d_path = 1.0 + f(c.tree_delay(H, k)) + f(c.accu_delay(Bx, H))
+        assert f(mc.delay) == A(max(d_path, f(c.fusion_delay(Bw, Bx, H))))
+        assert f(mc.throughput) == A(N / Bw * H * 2 * (k / Bx) / f(mc.delay), rel=1e-5)
+        assert f(mc.sram_bits) == A(N * H * L)
+
+    def test_fp_macro_assembly(self):
+        p = precision.BF16
+        N, H, L, k = 64.0, 128.0, 16.0, 4.0
+        mc = macros.fp_macro(N, H, L, k, p.B_w, p.B_E, p.B_M)
+        core = macros.int_macro(N, H, L, k, p.B_w, p.B_M)
+        br = p.B_w + p.B_M + np.log2(H)
+        assert f(mc.area) == A(
+            f(core.area) + f(c.align_area(H, p.B_E, p.B_M))
+            + f(c.convert_area(N, p.B_w, p.B_E, br)),
+            rel=1e-5,
+        )
+        assert f(mc.delay) == A(
+            max(
+                f(c.align_delay(H, p.B_E, p.B_M)),
+                f(core.delay),
+                f(c.convert_delay(p.B_E, br)),
+            )
+        )
+
+    def test_bf16_close_to_int8(self):
+        """Paper §IV: 'the overhead of BF16 is almost the same compared to
+        INT8' — same B_w=B_x=8 core, small align/convert additions."""
+        N, H, L, k = 128.0, 256.0, 8.0, 4.0
+        mi = macros.int_macro(N, H, L, k, 8, 8)
+        mf = macros.fp_macro(N, H, L, k, 8, 8, 8)
+        assert f(mf.area) / f(mi.area) < 1.35
+        assert f(mf.energy) / f(mi.energy) < 1.35
+
+    def test_selection_mux_variant_strictly_larger(self):
+        mi0 = macros.int_macro(64, 128, 16, 4, 8, 8, include_selection_mux=False)
+        mi1 = macros.int_macro(64, 128, 16, 4, 8, 8, include_selection_mux=True)
+        assert f(mi1.area) > f(mi0.area)
+        assert f(mi1.delay) > f(mi0.delay)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        j=st.integers(3, 8),
+        h=st.integers(1, 11),
+        l=st.integers(0, 6),
+        kk=st.integers(0, 3),
+    )
+    def test_monotonicity_properties(self, j, h, l, kk):
+        """Area/energy grow with N; doubling k never lowers throughput-per-
+        delay numerator; all costs positive & finite."""
+        N, H, L, k = float(8 * 2**j), float(2**h), float(2**l), float(2**kk)
+        mc = macros.int_macro(N, H, L, k, 8, 8)
+        mc2 = macros.int_macro(2 * N, H, L, k, 8, 8)
+        for field in ("area", "delay", "energy", "throughput"):
+            val = f(getattr(mc, field))
+            assert np.isfinite(val) and val > 0
+        assert f(mc2.area) > f(mc.area)
+        assert f(mc2.energy) > f(mc.energy)
+        assert f(mc2.throughput) == A(2 * f(mc.throughput), rel=1e-4)
+
+    def test_physical_conversion_roundtrip(self):
+        mc = macros.int_macro(64, 128, 16, 4, 8, 8)
+        ph = macros.physical(mc)
+        # TOPS/W == T / (E/D) independent of D_gate/E_gate consistency check
+        p_w = f(ph.energy_nJ) * 1e-9 / (f(ph.delay_ns) * 1e-9)
+        assert f(ph.tops_per_w) == A(f(ph.tops) / p_w, rel=1e-4)
+
+    def test_activity_scales_energy_only(self):
+        mc = macros.int_macro(64, 128, 16, 4, 8, 8)
+        p1 = macros.physical(mc, activity=1.0)
+        p2 = macros.physical(mc, activity=0.1)
+        assert f(p2.energy_nJ) == A(0.1 * f(p1.energy_nJ), rel=1e-5)
+        assert f(p2.tops_per_w) == A(10 * f(p1.tops_per_w), rel=1e-4)
+        assert f(p2.area_mm2) == A(f(p1.area_mm2))

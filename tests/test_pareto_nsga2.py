@@ -1,0 +1,154 @@
+"""Property tests for Pareto utilities + NSGA-II vs the brute-force oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import nsga2, pareto
+from repro.core.explorer import brute_force_front, explore, run_islands
+from repro.core.precision import get as get_precision
+from repro.core.space import DesignSpace
+
+OBJ = hnp.arrays(
+    np.float32,
+    hnp.array_shapes(min_dims=2, max_dims=2, min_side=2, max_side=24).filter(
+        lambda s: s[1] <= 5
+    ),
+    # allow_subnormal=False: XLA CPU flushes denormals to zero, numpy doesn't.
+    elements=st.floats(-100, 100, width=32, allow_subnormal=False),
+)
+
+
+def np_dominates(u, v):
+    return bool(np.all(u <= v) and np.any(u < v))
+
+
+class TestPareto:
+    @settings(max_examples=60, deadline=None)
+    @given(F=OBJ)
+    def test_front_mask_is_exactly_nondominated(self, F):
+        mask = np.asarray(pareto.pareto_front_mask(jnp.asarray(F)))
+        P = F.shape[0]
+        for i in range(P):
+            dominated = any(np_dominates(F[j], F[i]) for j in range(P) if j != i)
+            assert mask[i] == (not dominated)
+
+    @settings(max_examples=40, deadline=None)
+    @given(F=OBJ)
+    def test_rank0_equals_front_mask(self, F):
+        ranks = np.asarray(pareto.non_dominated_sort(jnp.asarray(F)))
+        mask = np.asarray(pareto.pareto_front_mask(jnp.asarray(F)))
+        np.testing.assert_array_equal(ranks == 0, mask)
+
+    @settings(max_examples=40, deadline=None)
+    @given(F=OBJ)
+    def test_ranks_monotone_under_domination(self, F):
+        """If i dominates j then rank(i) < rank(j)."""
+        ranks = np.asarray(pareto.non_dominated_sort(jnp.asarray(F)))
+        P = F.shape[0]
+        for i in range(P):
+            for j in range(P):
+                if i != j and np_dominates(F[i], F[j]):
+                    assert ranks[i] < ranks[j]
+
+    def test_constrained_domination_feasible_beats_infeasible(self):
+        F = jnp.asarray([[0.0, 0.0], [100.0, 100.0]])
+        v = jnp.asarray([1.0, 0.0])  # point 0 better objectives but infeasible
+        D = np.asarray(pareto.dominance_matrix(F, v))
+        assert D[1, 0] and not D[0, 1]
+
+    def test_crowding_boundaries_inf(self):
+        F = jnp.asarray([[0.0, 3.0], [1.0, 2.0], [2.0, 1.0], [3.0, 0.0]])
+        ranks = pareto.non_dominated_sort(F)
+        d = np.asarray(pareto.crowding_distance(F, ranks))
+        assert np.isinf(d[0]) and np.isinf(d[3])
+        assert np.isfinite(d[1]) and np.isfinite(d[2])
+
+    def test_nan_objectives_lose(self):
+        F = jnp.asarray([[np.nan, 0.0], [1.0, 1.0]])
+        mask = np.asarray(pareto.pareto_front_mask(F))
+        assert mask[1]
+
+    def test_hypervolume_sanity(self):
+        F = jnp.asarray([[0.0, 0.0]])
+        ref = jnp.asarray([1.0, 1.0])
+        hv = float(pareto.hypervolume_mc(F, ref, jax.random.PRNGKey(0), 20000))
+        assert hv == pytest.approx(1.0, abs=0.02)
+
+
+@pytest.fixture(scope="module")
+def int8_space():
+    return DesignSpace(prec=get_precision("int8"), w_store=16384)
+
+
+@pytest.fixture(scope="module")
+def oracle(int8_space):
+    genes = brute_force_front(int8_space)
+    F, _ = int8_space.evaluate(jnp.asarray(genes))
+    return genes, np.asarray(F)
+
+
+class TestNSGA2:
+    def test_constraint_always_satisfied_on_front(self, int8_space):
+        res = nsga2.run(int8_space, nsga2.NSGA2Config(pop_size=64, generations=24))
+        sp = int8_space
+        for g in res.front_genes:
+            N, H, L, k = (float(x) for x in sp.decode(jnp.asarray(g)))
+            assert N * H * L == sp.w_store * sp.prec.B_w
+            assert k <= sp.prec.B_x
+            assert N > 4 * sp.prec.B_w
+            assert L <= 64 and H <= 2048
+
+    def test_front_points_are_oracle_optimal(self, int8_space, oracle):
+        """Every NSGA-II front point must be Pareto-optimal in the *full
+        enumerated space* (soundness: no spurious 'optimal' designs).
+        Domination uses a 1e-5 relative tolerance: float32 ULP noise must
+        not count as 'strictly better'."""
+        _, oracle_F = oracle
+        res = nsga2.run(int8_space, nsga2.NSGA2Config(pop_size=96, generations=48))
+
+        def dominates_tol(u, v):
+            tol = 1e-5 * np.maximum(1.0, np.abs(v))
+            return bool(np.all(u <= v + tol) and np.any(u < v - tol))
+
+        for fo in res.front_objectives:
+            assert not any(dominates_tol(of, fo) for of in oracle_F)
+
+    def test_front_coverage_vs_oracle(self, int8_space, oracle):
+        """With a production budget NSGA-II recovers >=90% of the exact
+        front (completeness)."""
+        oracle_genes, _ = oracle
+        res = nsga2.run(int8_space, nsga2.NSGA2Config(pop_size=256, generations=96))
+        got = {tuple(g) for g in res.front_genes}
+        want = {tuple(g) for g in oracle_genes}
+        cov = len(got & want) / len(want)
+        assert cov >= 0.9, f"coverage {cov:.2f} ({len(got & want)}/{len(want)})"
+
+    def test_fp_space_explores(self):
+        pts = explore("bf16", 8192, nsga2.NSGA2Config(pop_size=64, generations=24))
+        assert len(pts) > 3
+        for p in pts:
+            assert p.precision == "bf16"
+            assert p.genes.shape == (3,)
+            assert p.area_mm2 > 0 and p.tops > 0
+
+    def test_islands_run_and_match_quality(self, int8_space, oracle):
+        oracle_genes, oracle_F = oracle
+        res = run_islands(
+            int8_space,
+            nsga2.NSGA2Config(pop_size=64, generations=0),
+            rounds=3,
+            gens_per_round=12,
+            n_migrants=4,
+        )
+        assert res.front_genes.shape[0] > 5
+        for fo in res.front_objectives:
+            assert not any(np_dominates(of, fo) for of in oracle_F)
+
+    def test_determinism(self, int8_space):
+        cfg = nsga2.NSGA2Config(pop_size=64, generations=16, seed=7)
+        a = nsga2.run(int8_space, cfg)
+        b = nsga2.run(int8_space, cfg)
+        np.testing.assert_array_equal(a.genes, b.genes)

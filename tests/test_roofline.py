@@ -1,0 +1,96 @@
+"""Roofline layer tests: analytic parameter counts vs actual init sizes,
+model-FLOPs sanity, record analysis."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch.roofline import (
+    RooflineRow, analyze_record, model_flops, param_counts,
+)
+from repro.models import lm
+
+
+@pytest.mark.parametrize("name", configs.ARCH_NAMES)
+def test_param_counts_match_init(name):
+    """The analytic count must match the real (smoke-scale) init within
+    ~2% (analytic skips norm scales and small biases)."""
+    cfg = configs.get_smoke_config(name)
+    shapes = jax.eval_shape(lambda k: lm.init(k, cfg), jax.random.PRNGKey(0))
+    n_real = sum(x.size for x in jax.tree.leaves(shapes))
+    n_analytic = param_counts(cfg)["total"]
+    # exclude MTP extra block (not in the analytic per-layer count)
+    assert n_analytic == pytest.approx(n_real, rel=0.06), (
+        name, n_analytic, n_real)
+
+
+def test_full_size_param_counts_plausible():
+    """Full configs land near their nameplate sizes."""
+    expect = {
+        "deepseek-v3-671b": (600e9, 740e9),
+        "qwen2-vl-72b": (60e9, 75e9),       # backbone only (no ViT)
+        "falcon-mamba-7b": (6e9, 8e9),
+        "qwen2.5-14b": (13e9, 16e9),
+        "qwen2.5-3b": (2.5e9, 3.7e9),
+        "mistral-nemo-12b": (11e9, 14e9),
+        "jamba-v0.1-52b": (45e9, 56e9),
+        # NB: the assigned dims (48L x 64e x d_ff 1408) imply 28B total
+        # (top-6 active ~2.8B = the "a3b"); the "16b" nameplate refers to
+        # the HF model's different layer mix — we follow the assignment.
+        "moonshot-v1-16b-a3b": (24e9, 30e9),
+        "phi4-mini-3.8b": (3.3e9, 4.6e9),
+        "musicgen-large": (1.4e9, 2.8e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = param_counts(configs.get_config(name))["total"]
+        assert lo <= n <= hi, (name, n / 1e9)
+
+
+def test_active_params_moe():
+    cfg = configs.get_config("deepseek-v3-671b")
+    pc = param_counts(cfg)
+    # ~37-50B active vs ~671-704B total (all-61-MoE per assignment)
+    assert pc["active"] / pc["total"] < 0.09
+    assert 30e9 < pc["active"] < 55e9
+
+
+def test_model_flops_kinds():
+    cfg = configs.get_config("qwen2.5-3b")
+    t = model_flops(cfg, "train", 4096, 256)
+    p = model_flops(cfg, "prefill", 4096, 256)
+    d = model_flops(cfg, "decode", 4096, 256)
+    assert t == pytest.approx(3 * p)
+    assert d == pytest.approx(p / 4096)
+
+
+def test_analyze_record_roundtrip():
+    rec = {
+        "arch": "qwen2.5-3b", "shape": "train_4k", "mesh": "pod16x16",
+        "status": "ok", "kind": "train", "seq_len": 4096,
+        "global_batch": 256, "n_devices": 256,
+        "analysis": {
+            "dot_flops": 1e14, "elem_flops": 1e11, "transcendentals": 1e9,
+            "mem_bytes": 1e12,
+            "collectives": {
+                k: {"count": 10, "bytes": 1e9}
+                for k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute")
+            },
+        },
+        "memory": {"argument_size_in_bytes": 2 << 30,
+                   "temp_size_in_bytes": 8 << 30},
+    }
+    row = analyze_record(rec)
+    assert row.status == "ok"
+    assert row.compute_s == pytest.approx((1e14 + 1e11) / 197e12)
+    assert row.memory_s == pytest.approx(1e12 / 819e9)
+    assert row.bottleneck in ("compute", "memory", "collective")
+    assert 0 < row.roofline_fraction < 1
+    assert row.device_bytes == 10 << 30
+
+
+def test_skipped_record():
+    rec = {"arch": "phi4-mini-3.8b", "shape": "long_500k",
+           "mesh": "pod16x16", "status": "skipped:full-attention-500k"}
+    row = analyze_record(rec)
+    assert row.status.startswith("skipped")

@@ -1,0 +1,143 @@
+"""Serving engine + DCIM functional-execution integration tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.precision import get as get_precision
+from repro.dcimmap import extract, plan
+from repro.core import nsga2
+from repro.models import lm
+from repro.serve import Engine, bucket_requests
+from repro.sim import DCIMMacroSim, quantize_sym
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, Engine(cfg, params, max_len=64)
+
+
+class TestEngine:
+    def test_greedy_deterministic(self, engine):
+        cfg, eng = engine
+        prompts = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (2, 8)).astype(np.int32)
+        a = eng.generate(prompts, n_tokens=8, temperature=0.0)
+        b = eng.generate(prompts, n_tokens=8, temperature=0.0)
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert a.tokens.shape == (2, 16)
+
+    def test_prompt_preserved(self, engine):
+        cfg, eng = engine
+        prompts = np.random.default_rng(1).integers(
+            0, cfg.vocab_size, (3, 5)).astype(np.int32)
+        out = eng.generate(prompts, n_tokens=4)
+        np.testing.assert_array_equal(out.tokens[:, :5], prompts)
+
+    def test_sampling_respects_temperature(self, engine):
+        cfg, eng = engine
+        prompts = np.random.default_rng(2).integers(
+            0, cfg.vocab_size, (2, 6)).astype(np.int32)
+        a = eng.generate(prompts, n_tokens=12, temperature=1.5, seed=1)
+        b = eng.generate(prompts, n_tokens=12, temperature=1.5, seed=2)
+        assert not np.array_equal(a.tokens, b.tokens)
+
+    def test_bucketing(self):
+        reqs = [[1, 2], [3, 4, 5], [6, 7], [8]]
+        buckets = bucket_requests(reqs)
+        lens = sorted(b[1].shape[1] for b in buckets)
+        assert lens == [1, 2, 3]
+        assert sum(len(b[0]) for b in buckets) == 4
+
+    def test_greedy_matches_stepwise_forward(self, engine):
+        """Engine output == naive re-forward argmax at each step."""
+        cfg, eng = engine
+        prompts = np.random.default_rng(3).integers(
+            0, cfg.vocab_size, (1, 6)).astype(np.int32)
+        out = eng.generate(prompts, n_tokens=3, temperature=0.0)
+        params = eng.params
+        toks = jnp.asarray(prompts)
+        for _ in range(3):
+            x = lm.embed_inputs(params, {"tokens": toks}, cfg)
+            h, _, _ = lm.forward_hidden(params, x, cfg, None, training=False)
+            h = lm.norm_apply(params["ln_f"], h, cfg.norm)
+            logits = lm._head_logits(params, h, cfg)
+            nxt = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            toks = jnp.concatenate([toks, nxt], axis=1)
+        np.testing.assert_array_equal(out.tokens, np.asarray(toks))
+
+
+class TestDcimSim:
+    def test_int8_execution_error_small(self):
+        sim = DCIMMacroSim(get_precision("int8"), N=64, H=64, L=8, k=4)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(64, 16)).astype(np.float32))
+        y = np.asarray(sim.mvm(x, w))
+        want = np.asarray(x @ w)
+        rel = np.abs(y - want) / np.maximum(np.abs(want), 1e-1)
+        assert np.median(rel) < 0.05
+
+    def test_quantize_sym_roundtrip_bound(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(100,)).astype(np.float32))
+        q, s = quantize_sym(x, 8)
+        err = np.abs(np.asarray(q) * float(s) - np.asarray(x))
+        assert err.max() <= float(s) / 2 + 1e-7
+
+    def test_fp_execution(self):
+        sim = DCIMMacroSim(get_precision("bf16"), N=64, H=64, L=16, k=4)
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+        y = np.asarray(sim.mvm_fp(x, w))
+        want = np.asarray(x @ w)
+        rel = np.abs(y - want) / np.maximum(np.abs(want), 1e-1)
+        assert np.median(rel) < 0.05
+
+    def test_accounting_scales(self):
+        sim = DCIMMacroSim(get_precision("int8"), N=64, H=64, L=8, k=4)
+        a = sim.account(1, 1024, 1024)
+        b = sim.account(2, 1024, 1024)
+        assert b["cycles"] == 2 * a["cycles"]
+        assert b["macs"] == 2 * a["macs"]
+        c = sim.account(1, 2048, 1024)
+        assert c["cycles"] == 2 * a["cycles"]
+
+
+class TestDcimMap:
+    def test_workloads_cover_families(self):
+        wl_attn = extract(configs.get_config("qwen2.5-3b"))
+        wl_ssm = extract(configs.get_config("falcon-mamba-7b"))
+        wl_moe = extract(configs.get_config("moonshot-v1-16b-a3b"))
+        assert any("attn" in g.name for g in wl_attn.gemms)
+        assert any("mamba" in g.name for g in wl_ssm.gemms)
+        assert any("moe" in g.name for g in wl_moe.gemms)
+        assert any("selective-scan" in u for u in wl_ssm.unmappable)
+        assert any("score" in u for u in wl_attn.unmappable)
+
+    def test_weight_totals_close_to_param_counts(self):
+        from repro.launch.roofline import param_counts
+
+        cfg = configs.get_config("qwen2.5-3b")
+        wl = extract(cfg)
+        pc = param_counts(cfg)
+        # GEMM weights are a large subset of total params (embed excluded)
+        assert 0.5 * pc["total"] < wl.total_weights() <= 1.05 * pc["total"]
+
+    def test_plan_end_to_end(self):
+        p = plan("qwen2.5-3b", precision="int8", w_store=65536,
+                 cfg_nsga=nsga2.NSGA2Config(pop_size=32, generations=12))
+        assert p.n_macros > 0
+        assert p.total_area_mm2 > 0
+        assert p.tokens_per_s > 0
+        assert p.macs_per_token > 1e9
+
+    def test_moe_activation_rate(self):
+        wl = extract(configs.get_config("moonshot-v1-16b-a3b"))
+        moe_gemms = [g for g in wl.gemms if g.name.startswith("moe_") and "shared" not in g.name and "router" not in g.name]
+        for g in moe_gemms:
+            assert g.activation == pytest.approx(6 / 64)
