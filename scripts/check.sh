@@ -1,0 +1,5 @@
+#!/usr/bin/env bash
+# Local equivalent of .github/workflows/ci.yml: the tier-1 test command.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+python -m pytest -x -q -m "not slow" "$@"

@@ -1,0 +1,230 @@
+"""Minimal, dependency-free fallback for the ``hypothesis`` API surface
+this repo's tests use.
+
+The real `hypothesis` package is declared in ``pyproject.toml`` and is
+always preferred; :func:`install` is only called (from
+``tests/conftest.py``) when it cannot be imported, so hermetic
+environments without it can still collect and run the property tests.
+The fallback is a plain deterministic fuzzer: each ``@given`` test runs
+``max_examples`` times against examples drawn from a per-test seeded
+``numpy`` generator.  No shrinking, no example database — failures
+reproduce exactly (the seed is derived from the test's qualname) but
+are not minimized.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+_FILTER_TRIES = 1000
+
+
+class _Assume(Exception):
+    """Raised by ``assume(False)`` — the example is silently discarded."""
+
+
+class Strategy:
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def filter(self, pred: Callable[[Any], bool]) -> "Strategy":
+        def draw(rng):
+            for _ in range(_FILTER_TRIES):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("minihypothesis: filter predicate too strict")
+
+        return Strategy(draw)
+
+    def map(self, fn: Callable[[Any], Any]) -> "Strategy":
+        return Strategy(lambda rng: fn(self._draw(rng)))
+
+
+# ------------------------------ strategies ------------------------------------
+def integers(min_value: int, max_value: int) -> Strategy:
+    return Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    *,
+    width: int = 64,
+    allow_subnormal: bool = True,
+    allow_nan: bool = False,
+    allow_infinity: bool = False,
+) -> Strategy:
+    del allow_subnormal, allow_nan, allow_infinity  # uniform draws avoid all
+
+    def draw(rng):
+        # Occasionally hit the endpoints — the classic boundary bugs.
+        r = rng.random()
+        if r < 0.05:
+            v = float(min_value)
+        elif r < 0.1:
+            v = float(max_value)
+        else:
+            v = float(rng.uniform(min_value, max_value))
+        return float(np.float32(v)) if width == 32 else v
+
+    return Strategy(draw)
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(2)))
+
+
+def sampled_from(elements: Sequence[Any]) -> Strategy:
+    elements = list(elements)
+    return Strategy(lambda rng: elements[int(rng.integers(len(elements)))])
+
+
+def just(value: Any) -> Strategy:
+    return Strategy(lambda rng: value)
+
+
+def tuples(*strategies: Strategy) -> Strategy:
+    return Strategy(lambda rng: tuple(s._draw(rng) for s in strategies))
+
+
+def lists(elements: Strategy, *, min_size: int = 0, max_size: int = 10) -> Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements._draw(rng) for _ in range(n)]
+
+    return Strategy(draw)
+
+
+# --------------------------- hypothesis.extra.numpy ----------------------------
+def array_shapes(
+    *, min_dims: int = 1, max_dims: int = 3, min_side: int = 1, max_side: int = 10
+) -> Strategy:
+    def draw(rng):
+        nd = int(rng.integers(min_dims, max_dims + 1))
+        return tuple(int(rng.integers(min_side, max_side + 1)) for _ in range(nd))
+
+    return Strategy(draw)
+
+
+def arrays(dtype, shape, *, elements: Strategy = None, fill=None, unique=False) -> Strategy:
+    del fill, unique
+
+    def draw(rng):
+        shp = shape._draw(rng) if isinstance(shape, Strategy) else tuple(shape)
+        n = int(np.prod(shp)) if shp else 1
+        if elements is not None:
+            vals = [elements._draw(rng) for _ in range(n)]
+        elif np.issubdtype(np.dtype(dtype), np.integer):
+            info = np.iinfo(np.dtype(dtype))
+            vals = rng.integers(info.min, info.max, size=n, endpoint=True)
+        else:
+            vals = rng.random(n)
+        return np.asarray(vals, dtype=dtype).reshape(shp)
+
+    return Strategy(draw)
+
+
+# ------------------------------ runner ----------------------------------------
+class settings:
+    """Decorator/settings object; only ``max_examples`` is honored."""
+
+    def __init__(self, max_examples: int = 50, deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._mh_settings = self
+        return fn
+
+
+def assume(condition) -> None:
+    if not condition:
+        raise _Assume
+
+
+def given(**strategy_kwargs: Strategy):
+    if not strategy_kwargs:
+        raise TypeError("minihypothesis: @given requires keyword strategies")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_mh_settings", None)
+            n = cfg.max_examples if cfg is not None else 20
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            executed = 0
+            for _ in range(n):
+                drawn = {k: s._draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                    executed += 1
+                except _Assume:
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"minihypothesis: falsifying example {drawn!r}"
+                    ) from e
+            if executed == 0:
+                raise AssertionError(
+                    f"minihypothesis: assume() discarded all {n} examples"
+                )
+
+        # Hide the drawn parameters from pytest's fixture resolution.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs
+            ]
+        )
+        return wrapper
+
+    return decorate
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+    too_slow = data_too_large = filter_too_much = None
+
+
+# ------------------------------ installer --------------------------------------
+def install() -> None:
+    """Register this module under the ``hypothesis`` import names.  Call
+    only when the real package is absent; a no-op if already installed."""
+    if "hypothesis" in sys.modules:
+        return
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers", "floats", "booleans", "sampled_from", "just", "tuples",
+        "lists",
+    ):
+        setattr(st_mod, name, globals()[name])
+
+    hnp_mod = types.ModuleType("hypothesis.extra.numpy")
+    hnp_mod.arrays = arrays
+    hnp_mod.array_shapes = array_shapes
+
+    extra_mod = types.ModuleType("hypothesis.extra")
+    extra_mod.numpy = hnp_mod
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.HealthCheck = HealthCheck
+    hyp.strategies = st_mod
+    hyp.extra = extra_mod
+    hyp.__version__ = "0.0-minihypothesis"
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod
+    sys.modules["hypothesis.extra"] = extra_mod
+    sys.modules["hypothesis.extra.numpy"] = hnp_mod

@@ -259,7 +259,7 @@ def run_islands(
     keys = jax.random.split(key, n_isl)
     pops = jax.vmap(lambda k: nsga2.init_population(space, cfg, k))(keys)
 
-    from jax import shard_map
+    from repro.dist.compat import shard_map
 
     body = shard_map(
         island_body,

@@ -1,0 +1,35 @@
+"""Version-compat shims for jax distribution APIs.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` (where its
+replication-check kwarg is ``check_rep``) to top-level ``jax.shard_map``
+(where the kwarg was renamed ``check_vma``).  All repo code routes
+through this wrapper so either jax generation works.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+try:  # jax >= 0.5-ish: top-level export, kwarg is check_vma
+    from jax import shard_map as _shard_map  # type: ignore[attr-defined]
+
+    _CHECK_KW = "check_vma"
+except ImportError:  # jax 0.4.x: experimental module, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool | None = None,
+    **kwargs: Any,
+):
+    """``jax.shard_map`` with the ``check_vma``/``check_rep`` rename papered
+    over.  ``check_vma=None`` leaves the jax default in place."""
+    if check_vma is not None:
+        kwargs[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

@@ -1,0 +1,245 @@
+"""Logical-axis sharding: the resolution layer between model code and
+physical meshes.
+
+Model code annotates activations with *logical* axis names::
+
+    x = shard_act(x, ("batch", "seq_sp", None))
+
+and parameters are matched by path against :data:`PARAM_RULES`::
+
+    logical_for_path("blocks/0/mixer/wq/w", 2)  ->  ("fsdp", "tp")
+
+A :class:`MeshContext` resolves logical names to physical mesh axes via
+a rule table (``logical -> tuple of mesh axes``), with two fallbacks
+that let identical model code run on any mesh:
+
+* **divisibility** — a dim that is not divisible by the resolved axis
+  size replicates (``axes_for`` returns ``None``); for multi-axis rules
+  the longest divisible *prefix* wins (e.g. ``batch -> ("pod", "data")``
+  degrades to ``("pod",)`` and then to replicated).
+* **each mesh axis used at most once per spec** — a later dim whose rule
+  names an already-consumed axis replicates on that axis instead.
+
+With no installed context (``use_mesh`` not entered) every annotation is
+an exact no-op, so all model code runs unsharded by default.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Tuple[str, ...]
+LogicalDims = Sequence[Optional[str]]
+
+# Mesh axes that carry data parallelism, in nesting order (outermost
+# first).  A 3-axis production mesh is ("pod", "data", "model"); a
+# single pod drops "pod".
+_DATA_AXES = ("pod", "data")
+_MODEL_AXES = ("model",)
+
+# Logical names that resolve to the tensor-parallel ("model") axis.
+_MODEL_LOGICAL = (
+    "tp", "heads", "kv_heads", "ff", "d_inner", "experts", "vocab", "seq_sp",
+)
+
+
+def default_rules(mesh: Mesh) -> Dict[str, Axes]:
+    """Default logical->physical rules derived from the mesh axis names.
+
+    ``batch`` (and ``fsdp``) map to every data-like axis present, in mesh
+    order — on a 3-axis mesh that is the multi-axis rule
+    ``("pod", "data")`` with prefix fallback handled at resolution time.
+    """
+    names = tuple(mesh.axis_names)
+    data = tuple(a for a in _DATA_AXES if a in names)
+    model = tuple(a for a in _MODEL_AXES if a in names)
+    rules: Dict[str, Axes] = {"batch": data, "fsdp": data}
+    for logical in _MODEL_LOGICAL:
+        rules[logical] = model
+    return rules
+
+
+class MeshContext:
+    """Resolves logical axis names against one physical mesh."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Axes]] = None):
+        self.mesh = mesh
+        self.rules = dict(rules) if rules is not None else default_rules(mesh)
+
+    # -- resolution -----------------------------------------------------------
+    def _axis_size(self, axis: str) -> int:
+        # Mesh.shape (name -> size) also exists on AbstractMesh, which has
+        # no .devices — required for dry-runs over abstract meshes.
+        return self.mesh.shape[axis]
+
+    def _divisible_prefix(self, axes: Axes, dim: int) -> Axes:
+        """Longest prefix of ``axes`` whose total size divides ``dim``."""
+        for end in range(len(axes), 0, -1):
+            size = 1
+            for a in axes[:end]:
+                size *= self._axis_size(a)
+            if dim % size == 0:
+                return axes[:end]
+        return ()
+
+    def axes_for(self, logical: str, dim: int) -> Optional[Axes]:
+        """Mesh axes for one logical dim, or ``None`` -> replicate.
+
+        ``None`` when the logical name has no rule, the rule names axes
+        absent from this mesh, or ``dim`` is not divisible by the axis
+        size (longest-divisible-prefix fallback for multi-axis rules).
+        """
+        axes = self.rules.get(logical)
+        if not axes:
+            return None
+        axes = tuple(a for a in axes if a in self.mesh.axis_names)
+        return self._divisible_prefix(axes, dim) or None
+
+    def spec(self, logical_dims: LogicalDims, shape: Sequence[int]) -> P:
+        """Resolve per-dim logical names into a ``PartitionSpec``.
+
+        Raises ``ValueError`` on rank mismatch.  Each mesh axis is used
+        at most once; a dim whose axes were already consumed replicates.
+        """
+        if len(logical_dims) != len(shape):
+            raise ValueError(
+                f"rank mismatch: {len(logical_dims)} logical dims "
+                f"{tuple(logical_dims)} for shape {tuple(shape)}"
+            )
+        used: set = set()
+        entries = []
+        for logical, dim in zip(logical_dims, shape):
+            axes = None if logical is None else self.axes_for(logical, dim)
+            if axes:
+                axes = tuple(a for a in axes if a not in used)
+                if axes:
+                    axes = self._divisible_prefix(axes, dim)
+            if not axes:
+                entries.append(None)
+                continue
+            used.update(axes)
+            entries.append(axes[0] if len(axes) == 1 else axes)
+        return P(*entries)
+
+    def sharding(self, logical_dims: LogicalDims, shape: Sequence[int]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_dims, shape))
+
+
+# ------------------------------ active context --------------------------------
+class _ContextStack(threading.local):
+    def __init__(self):
+        self.stack = []
+
+
+_ACTIVE = _ContextStack()
+
+
+def current() -> Optional[MeshContext]:
+    """The innermost active :class:`MeshContext`, or ``None``."""
+    return _ACTIVE.stack[-1] if _ACTIVE.stack else None
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, rules: Optional[Dict[str, Axes]] = None):
+    """Install ``mesh`` (or an existing ``MeshContext``) as the active
+    context consumed by :func:`shard_act` / :func:`current`."""
+    ctx = mesh if isinstance(mesh, MeshContext) else MeshContext(mesh, rules)
+    _ACTIVE.stack.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _ACTIVE.stack.pop()
+
+
+def shard_act(x, logical_dims: LogicalDims):
+    """Constrain ``x`` to the active context's resolution of
+    ``logical_dims``; exact identity no-op when no context is installed."""
+    ctx = current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(logical_dims, x.shape)
+    )
+
+
+# ------------------------------ parameter rules --------------------------------
+def _path_str(path) -> str:
+    """jax key-path -> "a/b/0/c" string (DictKey/SequenceKey/GetAttrKey)."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# Ordered (pattern, base logical axes) — first match wins.  ``base`` is
+# the logical layout at the parameter's natural rank; a scan-stacked
+# leaf (rank + 1, stacked over layer groups) gets a leading ``None``.
+PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # attention projections (GQA + MLA low-rank factors)
+    (r"(?:^|/)(?:wq|wk|wv|q_a|q_b|kv_a|kv_b)/w$", ("fsdp", "tp")),
+    (r"(?:^|/)wo/w$", ("tp", "fsdp")),
+    # dense FFN (leaf dicts with /w) — includes MoE shared experts
+    (r"(?:^|/)(?:w_up|w_gate)/w$", ("fsdp", "ff")),
+    (r"(?:^|/)w_down/w$", ("ff", "fsdp")),
+    # MoE expert banks: (E, d_model, d_ff) / (E, d_ff, d_model) — E on
+    # the model axis, d_ff on the data axes (fully sharded, §Perf I6)
+    (r"(?:^|/)(?:w_gate|w_up)$", ("experts", None, "fsdp")),
+    (r"(?:^|/)w_down$", ("experts", "fsdp", None)),
+    (r"(?:^|/)router/w$", ("fsdp", None)),
+    # embedding / unembedding
+    (r"(?:^|/)embed/w$", ("vocab", "fsdp")),
+    (r"(?:^|/)head/w$", ("fsdp", "vocab")),
+    # mamba mixer
+    (r"(?:^|/)in_proj/w$", ("fsdp", "tp")),
+    (r"(?:^|/)x_proj/w$", ("tp", None)),
+    (r"(?:^|/)dt_proj/w$", (None, "tp")),
+    (r"(?:^|/)out_proj/w$", ("tp", "fsdp")),
+    (r"(?:^|/)conv_w$", ("tp", None)),
+    (r"(?:^|/)A_log$", ("tp", None)),
+    # MTP combiner
+    (r"(?:^|/)proj/w$", ("fsdp", None)),
+)
+_PARAM_RULES = tuple((re.compile(pat), base) for pat, base in PARAM_RULES)
+
+
+def logical_for_path(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for a parameter path at a given rank.
+
+    Unmatched paths — norms, biases, raw optimizer-moment paths like
+    ``.../w_gate/m`` (the caller strips moment suffixes first, see
+    ``launch.dryrun.state_shardings``) — replicate.  A matched rule with
+    an unreconcilable rank also replicates.
+    """
+    for pat, base in _PARAM_RULES:
+        if pat.search(path):
+            if ndim == len(base):
+                return tuple(base)
+            if ndim == len(base) + 1:  # scan-stacked over layer groups
+                return (None,) + tuple(base)
+            break
+    return (None,) * ndim
+
+
+def param_sharding_tree(shape_tree, mesh: Mesh, rules: Optional[Dict[str, Axes]] = None):
+    """Map :func:`logical_for_path` over a param (shape) pytree into
+    ``NamedSharding``s on ``mesh`` — the ``device_put`` layout for a
+    freshly-initialized model and the dry-run's param shardings."""
+    ctx = MeshContext(mesh, rules)
+
+    def one(path, leaf):
+        logical = logical_for_path(_path_str(path), len(leaf.shape))
+        return ctx.sharding(logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, shape_tree)

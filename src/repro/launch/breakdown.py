@@ -14,7 +14,10 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Tuple
 
-import zstandard
+try:
+    import zstandard
+except ModuleNotFoundError:  # optional: only .hlo.zst inputs need it
+    zstandard = None
 
 from .hlo_analysis import (
     _COLLECTIVES, _CONTRACT_RE, _OPERAND_RE, _shape_bytes, _shape_elems,
@@ -96,6 +99,10 @@ def load_hlo(path: str) -> str:
     p = pathlib.Path(path)
     raw = p.read_bytes()
     if p.suffix == ".zst":
+        if zstandard is None:
+            raise ModuleNotFoundError(
+                "reading .hlo.zst requires the optional 'zstandard' package"
+            )
         raw = zstandard.ZstdDecompressor().decompress(raw)
     return raw.decode()
 

@@ -267,16 +267,22 @@ def analyze_compiled(lowered, compiled, hlo_path: Optional[pathlib.Path] = None)
         rec["collectives_naive"] = collective_stats(hlo)
         # Trip-count-aware analysis (cost_analysis counts while bodies once).
         rec["analysis"] = analyze_hlo(hlo)
-        if hlo_path is not None:
-            # Persist compressed HLO so §Perf iterations can re-analyze
-            # offline without recompiling.
+    except Exception as e:  # pragma: no cover
+        rec["analysis"] = {"error": str(e)}
+        return rec
+    if hlo_path is not None:
+        # Persist compressed HLO so §Perf iterations can re-analyze
+        # offline without recompiling.  Persistence is best-effort and
+        # must never clobber the computed analysis: zstandard is an
+        # optional dependency (the ``hlo`` extra) and the write can fail.
+        try:
             import zstandard
 
             hlo_path.write_bytes(
                 zstandard.ZstdCompressor(level=6).compress(hlo.encode())
             )
-    except Exception as e:  # pragma: no cover
-        rec["analysis"] = {"error": str(e)}
+        except Exception as e:  # pragma: no cover
+            rec["hlo_persist_error"] = f"{type(e).__name__}: {e}"
     return rec
 
 

@@ -117,7 +117,7 @@ def _pallas_scan(p, u, cfg):
     if ctx is None:
         return run(u, dt, Bc, Cc, A, D_skip)
 
-    from jax import shard_map
+    from repro.dist.compat import shard_map
     from jax.sharding import PartitionSpec as P
 
     mesh = ctx.mesh

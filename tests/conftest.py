@@ -1,0 +1,19 @@
+"""Test bootstrap: put ``src/`` on ``sys.path`` so bare
+``python -m pytest`` works without the ``PYTHONPATH=src`` incantation,
+and fall back to the in-repo hypothesis shim when the real package is
+not installed (hermetic CI images)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+try:
+    import hypothesis  # noqa: F401  (real package preferred)
+except ModuleNotFoundError as e:
+    if e.name != "hypothesis":  # broken install of a transitive dep: surface it
+        raise
+    from repro._compat import minihypothesis
+
+    minihypothesis.install()

@@ -187,8 +187,7 @@ with shd.use_mesh(mesh):
     p_sh = shd.param_sharding_tree(jax.eval_shape(lambda: params), mesh)
     params = jax.device_put(params, p_sh)
     batch = concrete_batch(cfg, "train", 4, 16, seed=0)
-    b_sh = {k: NamedSharding(mesh, P("data") if v.ndim == 2 else P("data"))
-            for k, v in batch.items()}
+    b_sh = {k: NamedSharding(mesh, P("data")) for k in batch}
     batch = jax.device_put(batch, b_sh)
     loss, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg))(params, batch)
     loss_sharded = float(loss)
@@ -200,7 +199,7 @@ loss_ref, _ = jax.jit(lambda p, b: lm.loss_fn(p, b, cfg))(params_r, batch_r)
 print(json.dumps({"sharded": loss_sharded, "ref": float(loss_ref)}))
 
 # compressed ring all-reduce numerics on 8 devices
-from jax import shard_map
+from repro.dist.compat import shard_map
 from repro.optim.grad_compress import ring_allreduce_int8
 x = np.random.default_rng(0).normal(size=(8, 1000)).astype(np.float32)
 ring_mesh = jax.make_mesh((8,), ("d",))
