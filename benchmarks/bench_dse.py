@@ -1,0 +1,174 @@
+"""Batched vs sequential multi-scenario DSE benchmark.
+
+Measures, for a fixed 8-scenario mixed INT/FP sweep:
+
+  * ``sequential_s`` — ``explore_multi(batched=False)``: the historical
+    per-scenario loop that re-traces and re-jits NSGA-II for every
+    (precision, W_store) scenario,
+  * ``batched_s`` — ``explore_multi(batched=True)``: ONE jitted program
+    over the :class:`repro.core.scenario.ScenarioTable` (scenario params
+    as traced data, ``vmap`` over the scenario axis),
+  * warm per-generation NSGA-II throughput of the batched program,
+
+checks the two paths return identical fronts, and writes the record to
+``BENCH_dse.json`` at the repo root (the DSE perf trajectory; CI
+regenerates it with ``--smoke`` on every PR).
+
+Each path runs in its OWN subprocess so both are measured cold — jit
+caches warmed by one path would otherwise subsidize the other.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_dse            # full (paper cfg)
+  PYTHONPATH=src python -m benchmarks.bench_dse --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import platform
+import subprocess
+import sys
+import time
+
+SCENARIOS = [
+    ("int2", 16384), ("int4", 16384), ("int8", 65536), ("int16", 32768),
+    ("fp8", 16384), ("bf16", 32768), ("fp16", 65536), ("fp32", 131072),
+]
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _cfg(smoke: bool):
+    from repro.core import nsga2
+
+    return (
+        nsga2.NSGA2Config(pop_size=32, generations=8)
+        if smoke
+        else nsga2.NSGA2Config(pop_size=128, generations=64)
+    )
+
+
+def run_one(path: str, smoke: bool) -> None:
+    """Child-process entry: run one pipeline cold, print a JSON line."""
+    from repro.core import explorer
+
+    cfg = _cfg(smoke)
+    t0 = time.perf_counter()
+    pts = explorer.explore_multi(SCENARIOS, cfg, batched=(path == "batched"))
+    elapsed = time.perf_counter() - t0
+    front = sorted(
+        [p.precision, p.w_store] + [int(g) for g in p.genes] for p in pts
+    )
+    # Stable cross-process digest (str hash() is per-process randomized).
+    import hashlib
+
+    digest = hashlib.sha1(json.dumps(front).encode()).hexdigest()
+    print(json.dumps({
+        "path": path,
+        "seconds": round(elapsed, 3),
+        "front_size": len(pts),
+        "front_key": digest,
+    }))
+
+
+def _spawn(path: str, smoke: bool) -> dict:
+    env = dict(os.environ)
+    src = str(REPO_ROOT / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "benchmarks.bench_dse", "--run-one", path]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(
+        cmd, capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+        timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"{path} run failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def _warm_throughput(smoke: bool) -> dict:
+    """Warm per-generation throughput of the batched NSGA-II program."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import nsga2
+    from repro.core.scenario import ScenarioTable
+
+    cfg = _cfg(smoke)
+    table = ScenarioTable.from_specs(SCENARIOS)
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = jnp.broadcast_to(key, (len(table),) + key.shape)
+    jax.block_until_ready(nsga2._run_batched_jit(table, cfg, keys))  # warm
+    iters = 3
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(nsga2._run_batched_jit(table, cfg, keys))
+    warm = (time.perf_counter() - t0) / iters
+    gens_total = cfg.generations * len(table)
+    return {
+        "warm_batched_s": round(warm, 4),
+        "per_generation_ms": round(warm / max(gens_total, 1) * 1e3, 4),
+        "individuals_per_s": round(
+            gens_total * cfg.pop_size / max(warm, 1e-9), 1
+        ),
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small population / few generations)")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_dse.json"))
+    ap.add_argument("--run-one", choices=["batched", "sequential"],
+                    help=argparse.SUPPRESS)  # child-process mode
+    args = ap.parse_args()
+
+    if args.run_one:
+        run_one(args.run_one, args.smoke)
+        return 0
+
+    import jax
+
+    cfg = _cfg(args.smoke)
+    batched = _spawn("batched", args.smoke)
+    sequential = _spawn("sequential", args.smoke)
+
+    rec = {
+        "scenarios": [list(s) for s in SCENARIOS],
+        "config": {
+            "pop_size": cfg.pop_size, "generations": cfg.generations,
+            "seed": cfg.seed, "use_pallas": cfg.use_pallas,
+        },
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "batched_s": batched["seconds"],
+        "sequential_s": sequential["seconds"],
+        "speedup": round(
+            sequential["seconds"] / max(batched["seconds"], 1e-9), 2
+        ),
+        "front_size": batched["front_size"],
+        "fronts_identical": (
+            batched["front_key"] == sequential["front_key"]
+            and batched["front_size"] == sequential["front_size"]
+        ),
+        "smoke": bool(args.smoke),
+    }
+    rec.update(_warm_throughput(args.smoke))
+
+    from repro.core.results import dump_json
+
+    path = dump_json(args.out, rec)
+    print(f"batched={rec['batched_s']}s sequential={rec['sequential_s']}s "
+          f"speedup={rec['speedup']}x fronts_identical={rec['fronts_identical']} "
+          f"per_gen={rec['per_generation_ms']}ms -> {path}")
+    if not rec["fronts_identical"]:
+        print("ERROR: batched and sequential fronts differ")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

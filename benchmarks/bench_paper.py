@@ -82,14 +82,18 @@ def bench_fig8():
 
 def bench_table1_capabilities():
     """Table I row 'SEGA-DCIM': INT & Float, estimation model, Pareto
-    design space, automatic trade-offs — demonstrated programmatically."""
+    design space, automatic trade-offs — demonstrated programmatically.
+    Both scenarios run in ONE batched NSGA-II (scenario-table pipeline)."""
     t0 = time.perf_counter()
-    union = explorer.explore_multi([("int8", 4096), ("bf16", 4096)], CFG)
+    union = explorer.explore_multi(
+        [("int8", 4096), ("bf16", 4096)], CFG, batched=True
+    )
     kinds = {p.precision for p in union}
     dt = (time.perf_counter() - t0) * 1e6
     emit(
         "table1.multi_precision_pareto", dt,
-        f"precisions={sorted(kinds)} union_front={len(union)} automatic=True",
+        f"precisions={sorted(kinds)} union_front={len(union)}"
+        f" automatic=True batched=True",
     )
 
 
@@ -128,6 +132,8 @@ def bench_dse():
         f"unjit_s={t_unjit:.2f} jit_s={t_jit:.2f}"
         f" speedup={t_unjit / max(t_jit, 1e-9):.1f}x",
     )
+    # Batched multi-scenario DSE has its own trajectory benchmark:
+    # benchmarks/bench_dse.py -> BENCH_dse.json.
 
 
 def main():

@@ -2,10 +2,18 @@
 
     PYTHONPATH=src python examples/distributed_dse.py
 
-On this CPU box the mesh is 1 device (islands ring degenerates
-gracefully); on a pod the same code runs one island per chip with ring
-migration over ICI — see tests/test_sharding_dist.py for the forced
-8-device variant.
+Two layouts:
+
+  * single scenario, one island per device along one mesh axis
+    (``run_islands``), and
+  * the scenario x island 2-D mesh (``run_islands_multi``): scenarios
+    sharded (and locally vmapped) on one axis, islands with ring
+    migration on the other, resolved through ``repro.dist`` logical
+    axes.
+
+On this CPU box the mesh is 1 device (rings degenerate gracefully); on a
+pod the same code runs one island per chip with ring migration over ICI
+— see tests/test_sharding_dist.py for the forced 8-device variant.
 """
 import time
 
@@ -34,6 +42,26 @@ def main():
     )
     for p in pts:
         print("  " + p.summary())
+
+    # Scenario x island sharding: all scenarios evolve concurrently, each
+    # with its own migration ring.
+    scenarios = [("int8", 65536), ("bf16", 65536), ("int4", 16384),
+                 ("fp16", 32768)]
+    t0 = time.perf_counter()
+    results = explorer.run_islands_multi(
+        scenarios, cfg, rounds=4, gens_per_round=16, n_migrants=8
+    )
+    dt = time.perf_counter() - t0
+    print(f"\nscenario x island DSE ({len(scenarios)} scenarios): "
+          f"{dt:.2f}s wall")
+    for (prec, w), r in zip(scenarios, results):
+        oracle = explorer.brute_force_front(
+            DesignSpace(prec=get(prec), w_store=w)
+        )
+        got = {tuple(g) for g in r.front_genes}
+        want = {tuple(g) for g in oracle}
+        print(f"  {prec:>5} W={w:<6} front={len(r.front_genes):<3} "
+              f"oracle coverage {len(got & want)}/{len(want)}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,11 @@
 #!/usr/bin/env bash
-# Local equivalent of .github/workflows/ci.yml: the tier-1 test command.
+# Local equivalent of .github/workflows/ci.yml: the tier-1 test command,
+# DSE perf record regeneration (batched vs sequential explore_multi ->
+# BENCH_dse.json), and a single-cell dry-run through the results store.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m pytest -x -q -m "not slow" "$@"
+PYTHONPATH=src python -m benchmarks.bench_dse --smoke
+PYTHONPATH=src python -m repro.launch.dryrun \
+  --arch qwen2.5-3b --shape decode_32k --mesh single \
+  --out results/dryrun-ci --force

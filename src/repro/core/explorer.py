@@ -1,20 +1,30 @@
 """MOGA-based design space explorer (paper Fig. 4, §III-B).
 
-Drives NSGA-II per (precision, W_store, template), merges fronts across
-templates/precisions into one candidate set (re-extracting the joint
-Pareto front, as the paper's "Pareto set containing both integer and
-floating-point solutions"), applies *user-defined distillation*
-(application constraints), and hands selected points to the
-template-based generator.
+Drives NSGA-II across (precision, W_store, template) scenarios, merges
+fronts across templates/precisions into one candidate set (re-extracting
+the joint Pareto front, as the paper's "Pareto set containing both
+integer and floating-point solutions"), applies *user-defined
+distillation* (application constraints), and hands selected points to
+the template-based generator.
+
+Since the scenario-table refactor, ``explore_multi`` is *batched by
+default*: scenario parameters are traced data
+(:class:`repro.core.scenario.ScenarioTable`), so all S scenarios evolve
+in ONE jitted program (one trace, S x P populations) instead of
+re-tracing NSGA-II per scenario.  The sequential per-scenario loop is
+kept (``batched=False``) as the equivalence/benchmark reference.
 
 Also provides the exhaustive brute-force oracle (the log2-linear storage
-constraint makes the space finitely enumerable) and a distributed
-*island-model* NSGA-II over a JAX mesh (`shard_map` + ring migration via
-``lax.ppermute``) so the DSE itself scales to pods.
+constraint makes the space finitely enumerable) and distributed
+*island-model* NSGA-II over a JAX mesh: :func:`run_islands` (one
+scenario, islands along one axis) and :func:`run_islands_multi`
+(scenario x island sharding on a 2-D mesh via ``repro.dist`` logical
+axes; ring migration via ``lax.ppermute`` stays per-scenario).
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from functools import partial
 from typing import List, Optional, Sequence
@@ -23,14 +33,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from . import nsga2
+from . import scenario as scen_mod
 from .cells import CALIBRATED, CellLibrary, TechParams, TSMC28
 from .macros import physical
 from .pareto import pareto_front_mask
 from .precision import Precision, get as get_precision
-from .space import DesignSpace, N_GENES
+from .scenario import N_GENES, ScenarioTable
+from .space import DesignSpace
 
 
 @dataclasses.dataclass
@@ -72,18 +84,27 @@ class ParetoPoint:
         )
 
 
+@partial(jax.jit, static_argnums=(2, 3))
+def _point_metrics_jit(row, genes, tech: TechParams, activity: float):
+    c = scen_mod.costs(row, genes)
+    return c, physical(c, tech, activity), scen_mod.decode(row, genes)
+
+
 def _points_from_genes(
     space: DesignSpace,
     genes: np.ndarray,
     tech: TechParams,
     activity: float,
+    bucket: Optional[int] = None,
 ) -> List[ParetoPoint]:
     if genes.size == 0:
         return []
-    g = jnp.asarray(genes.reshape(-1, N_GENES))
-    costs = space.costs(g)
-    phys = physical(costs, tech, activity)
-    N, H, L, k = (np.asarray(x) for x in space.decode(g))
+    gp, n = scen_mod.pad_to_bucket(genes.reshape(-1, N_GENES), bucket)
+    costs, phys, nhlk = jax.tree.map(
+        lambda a: np.asarray(a)[:n],
+        _point_metrics_jit(space.scenario, jnp.asarray(gp), tech, activity),
+    )
+    N, H, L, k = nhlk
     out = []
     for i in range(genes.shape[0]):
         out.append(
@@ -110,12 +131,23 @@ def _points_from_genes(
     return out
 
 
+def _normalize_scenarios(scenarios: Sequence[tuple]) -> List[tuple]:
+    out = []
+    for prec, w in scenarios:
+        out.append((get_precision(prec) if isinstance(prec, str) else prec, w))
+    return out
+
+
 def brute_force_front(space: DesignSpace) -> np.ndarray:
-    """Exact Pareto-optimal genomes by full enumeration (the oracle)."""
-    genes = jnp.asarray(space.enumerate_feasible())
-    F, v = space.evaluate(genes)
-    mask = np.asarray(pareto_front_mask(F, v))
-    return np.asarray(genes)[mask]
+    """Exact Pareto-optimal genomes by full enumeration (the oracle).
+
+    Routed through the same jitted evaluate+front program as the NSGA-II
+    archive extraction (``enumerate_feasible`` only yields
+    zero-violation genomes, so the feasibility mask is a no-op here)."""
+    genes = space.enumerate_feasible()
+    gp, n = scen_mod.pad_to_bucket(genes)
+    _, _, mask = nsga2._archive_front_jit(space.scenario, jnp.asarray(gp))
+    return np.asarray(genes)[np.asarray(mask)[:n]]
 
 
 def explore(
@@ -128,7 +160,12 @@ def explore(
     method: str = "nsga2",
     include_selection_mux: bool = False,
 ) -> List[ParetoPoint]:
-    """Explore one (precision, W_store) scenario; returns its Pareto set."""
+    """Explore one (precision, W_store) scenario; returns its Pareto set.
+
+    ``method``: ``"nsga2"`` (batched pipeline, scenario params as traced
+    data), ``"nsga2-static"`` (historical one-jit-per-space reference),
+    or ``"brute"`` (exhaustive oracle).
+    """
     prec = get_precision(precision) if isinstance(precision, str) else precision
     space = DesignSpace(
         prec=prec, w_store=w_store, lib=lib,
@@ -136,8 +173,12 @@ def explore(
     )
     if method == "brute":
         fg = brute_force_front(space)
-    else:
+    elif method == "nsga2-static":
+        fg = nsga2.run_static(space, cfg).front_genes
+    elif method == "nsga2":
         fg = nsga2.run(space, cfg).front_genes
+    else:
+        raise ValueError(f"unknown method {method!r}")
     return _points_from_genes(space, fg, tech, activity)
 
 
@@ -145,25 +186,80 @@ def explore_multi(
     scenarios: Sequence[tuple],
     cfg: nsga2.NSGA2Config = nsga2.NSGA2Config(),
     cross_dominate: bool = False,
-    **kw,
+    batched: bool = True,
+    lib: CellLibrary = TSMC28,
+    tech: TechParams = CALIBRATED,
+    activity: float = 1.0,
+    method: str = "nsga2",
+    include_selection_mux: bool = False,
+    store=None,
+    record_name: str = "explore_multi",
 ) -> List[ParetoPoint]:
     """Union of per-scenario fronts — the paper's merged INT+FP candidate
     set handed to user distillation.
 
-    ``scenarios`` is a list of (precision, w_store).  By default points
-    of different precisions do NOT dominate each other (an INT8 design is
-    not a functional substitute for a BF16 one; the paper's distillation
-    step picks by application).  ``cross_dominate=True`` re-reduces the
-    union to a single joint front instead.
+    ``scenarios`` is a list of (precision, w_store).  With
+    ``batched=True`` (default) all scenarios run in ONE jitted NSGA-II
+    (``nsga2.run_batched`` over a :class:`ScenarioTable`); with
+    ``batched=False`` the historical sequential loop runs one jit per
+    scenario — both produce identical fronts (tested).
+
+    By default points of different precisions do NOT dominate each other
+    (an INT8 design is not a functional substitute for a BF16 one; the
+    paper's distillation step picks by application).
+    ``cross_dominate=True`` re-reduces the union to a single joint front
+    instead.
+
+    ``store`` may be a :class:`repro.core.results.ResultStore`; the
+    merged front and wall-time are then persisted under ``record_name``.
     """
+    t0 = time.perf_counter()
+    specs = _normalize_scenarios(scenarios)
     pts: List[ParetoPoint] = []
-    for prec, w in scenarios:
-        pts.extend(explore(prec, w, cfg, **kw))
-    if not pts or not cross_dominate:
-        return pts
-    F = jnp.asarray(np.stack([p.objectives for p in pts]))
-    mask = np.asarray(pareto_front_mask(F))
-    return [p for p, m in zip(pts, mask) if m]
+    if batched and method == "nsga2" and specs:
+        table = ScenarioTable.from_specs(
+            specs, lib=lib, include_selection_mux=include_selection_mux
+        )
+        results = nsga2.run_batched(table, cfg)
+        # One padded shape for every scenario's front -> one
+        # _point_metrics_jit compile for the whole batch.
+        sizes = [r.front_genes.shape[0] for r in results if r.front_genes.size]
+        bucket = scen_mod._bucket(max(sizes)) if sizes else None
+        for (prec, w), res in zip(specs, results):
+            space = DesignSpace(
+                prec=prec, w_store=w, lib=lib,
+                include_selection_mux=include_selection_mux,
+            )
+            pts.extend(
+                _points_from_genes(
+                    space, res.front_genes, tech, activity, bucket=bucket
+                )
+            )
+    else:
+        # Sequential reference: one (re-)jit per scenario.
+        seq_method = "nsga2-static" if method == "nsga2" else method
+        for prec, w in specs:
+            pts.extend(
+                explore(
+                    prec, w, cfg, lib=lib, tech=tech, activity=activity,
+                    method=seq_method,
+                    include_selection_mux=include_selection_mux,
+                )
+            )
+    if pts and cross_dominate:
+        F = jnp.asarray(np.stack([p.objectives for p in pts]))
+        mask = np.asarray(pareto_front_mask(F))
+        pts = [p for p, m in zip(pts, mask) if m]
+    if store is not None:
+        from .results import front_payload
+
+        payload = front_payload(pts)
+        payload["scenarios"] = [(p.name, w) for p, w in specs]
+        payload["batched"] = batched
+        payload["cross_dominate"] = cross_dominate
+        store.put(record_name, payload, kind="dse",
+                  wall_s=time.perf_counter() - t0)
+    return pts
 
 
 def distill(
@@ -207,6 +303,56 @@ def distill(
 # --------------------------------------------------------------------------
 # Island-model NSGA-II: population-parallel DSE over a device mesh.
 # --------------------------------------------------------------------------
+def _island_body(row, cfg, n_isl, axis, rounds, gens_per_round, n_migrants):
+    """Per-island evolution for one scenario: ``pop (P, 3), key -> (pop,
+    archive)``.  Every round the best ``n_migrants`` individuals migrate
+    along a ring over mesh axis ``axis`` (``lax.ppermute``) and replace
+    the worst.  Shared by the single-scenario and scenario x island
+    runners."""
+    step = nsga2.make_step(row, cfg)
+
+    def body(pop, key):
+        def one_round(carry, r):
+            pop, key = carry
+            key = jax.random.fold_in(key, r)
+            (pop, _), visited = lax.scan(
+                step, (pop, key), jnp.arange(gens_per_round)
+            )
+            F, v = scen_mod.evaluate(row, pop)
+            ranks, crowd = nsga2._rank_and_crowd(F, v, cfg.use_pallas)
+            crowd_c = jnp.where(jnp.isinf(crowd), 1e30, crowd)
+            order = jnp.lexsort((-crowd_c, ranks))
+            best = pop[order[:n_migrants]]
+            if n_isl > 1:
+                perm = [(i, (i + 1) % n_isl) for i in range(n_isl)]
+                incoming = lax.ppermute(best, axis, perm)
+            else:
+                incoming = best
+            pop = pop.at[order[-n_migrants:]].set(incoming)
+            return (pop, key), visited.reshape(-1, N_GENES)
+
+        (pop, _), visited = lax.scan(one_round, (pop, key), jnp.arange(rounds))
+        archive = jnp.concatenate([visited.reshape(-1, N_GENES), pop], axis=0)
+        return pop, archive
+
+    return body
+
+
+def _islands_result(row, pops, archives) -> nsga2.NSGA2Result:
+    """Pool one scenario's islands and extract the archive front."""
+    pop = np.asarray(pops).reshape(-1, N_GENES)
+    F, v = scen_mod.evaluate(row, jnp.asarray(pop))
+    F, v = np.asarray(F), np.asarray(v)
+    # 0 for the pooled population's front, 1 otherwise.
+    ranks = (~np.asarray(
+        pareto_front_mask(jnp.asarray(F), jnp.asarray(v))
+    )).astype(np.int32)
+    archive = np.concatenate(
+        [np.asarray(archives).reshape(-1, N_GENES), pop], axis=0
+    )
+    return nsga2._extract_result(row, pop, F, v, ranks, archive)
+
+
 def run_islands(
     space: DesignSpace,
     cfg: nsga2.NSGA2Config = nsga2.NSGA2Config(),
@@ -225,39 +371,19 @@ def run_islands(
         dev = np.array(jax.devices())
         mesh = Mesh(dev.reshape(-1), (axis,))
     n_isl = mesh.shape[axis]
-    step = nsga2.make_step(space, cfg)
+    row = space.scenario
+    island = _island_body(
+        row, cfg, n_isl, axis, rounds, gens_per_round, n_migrants
+    )
 
     def island_body(pop, key):
         # pop: (1, P, 3) local block -> squeeze island dim inside shard_map
-        pop = pop[0]
-        key = key[0]
-
-        def one_round(carry, r):
-            pop, key = carry
-            key = jax.random.fold_in(key, r)
-            (pop, _), visited = lax.scan(
-                step, (pop, key), jnp.arange(gens_per_round)
-            )
-            F, v = space.evaluate(pop)
-            ranks, crowd = nsga2._rank_and_crowd(F, v, cfg.use_pallas)
-            crowd_c = jnp.where(jnp.isinf(crowd), 1e30, crowd)
-            order = jnp.lexsort((-crowd_c, ranks))
-            best = pop[order[:n_migrants]]
-            if n_isl > 1:
-                perm = [(i, (i + 1) % n_isl) for i in range(n_isl)]
-                incoming = lax.ppermute(best, axis, perm)
-            else:
-                incoming = best
-            pop = pop.at[order[-n_migrants:]].set(incoming)
-            return (pop, key), visited.reshape(-1, N_GENES)
-
-        (pop, _), visited = lax.scan(one_round, (pop, key), jnp.arange(rounds))
-        archive = jnp.concatenate([visited.reshape(-1, N_GENES), pop], axis=0)
+        pop, archive = island(pop[0], key[0])
         return pop[None], archive[None]
 
     key = jax.random.PRNGKey(cfg.seed)
     keys = jax.random.split(key, n_isl)
-    pops = jax.vmap(lambda k: nsga2.init_population(space, cfg, k))(keys)
+    pops = jax.vmap(lambda k: nsga2.init_population(row, cfg, k))(keys)
 
     from repro.dist.compat import shard_map
 
@@ -269,28 +395,97 @@ def run_islands(
         check_vma=False,
     )
     pops, archives = jax.jit(body)(pops, keys)
-    pop = np.asarray(pops).reshape(-1, N_GENES)
+    return _islands_result(row, pops, archives)
 
-    # Front over the union of all islands' elitist archives.
-    arch = np.unique(np.asarray(archives).reshape(-1, N_GENES), axis=0)
-    aF, av = space.evaluate(jnp.asarray(arch))
-    mask = np.asarray(pareto_front_mask(aF, av)) & (np.asarray(av) <= 0)
-    fg = arch[mask]
-    fF = np.asarray(aF)[mask]
 
-    F, v = space.evaluate(jnp.asarray(pop))
-    F, v = np.asarray(F), np.asarray(v)
-    ranks = np.asarray(
-        pareto_front_mask(jnp.asarray(F), jnp.asarray(v))
-    ) == False  # noqa: E712 - 0 for front, 1 otherwise
-    return nsga2.NSGA2Result(
-        genes=pop,
-        objectives=F,
-        violation=v,
-        ranks=ranks.astype(np.int32),
-        front_genes=fg,
-        front_objectives=fF,
+def run_islands_multi(
+    scenarios: Sequence[tuple] | ScenarioTable,
+    cfg: nsga2.NSGA2Config = nsga2.NSGA2Config(),
+    mesh: Optional[Mesh] = None,
+    rounds: int = 4,
+    gens_per_round: int = 16,
+    n_migrants: int = 8,
+    scenario_axis: str = "scenario",
+    island_axis: str = "island",
+) -> List[nsga2.NSGA2Result]:
+    """Scenario x island sharded DSE: S scenarios, each with one NSGA-II
+    island per device along ``island_axis``, scenarios sharded (and
+    locally vmapped) along ``scenario_axis``.
+
+    The 2-D mesh layout is resolved through ``repro.dist`` logical axes
+    (``MeshContext`` with ``{"scenario": scenario_axis, "island":
+    island_axis}`` rules) so the same code runs from a 1-chip CPU box
+    (everything local, ring degenerate) to a pod slice.  Ring migration
+    (``lax.ppermute``) runs over ``island_axis`` only — migration never
+    crosses scenarios, keeping each scenario plain island NSGA-II.
+    """
+    table = (
+        scenarios
+        if isinstance(scenarios, ScenarioTable)
+        else ScenarioTable.from_specs(_normalize_scenarios(scenarios))
     )
+    S = len(table)
+    if mesh is None:
+        dev = np.array(jax.devices())
+        s_mesh = math.gcd(S, dev.size)
+        mesh = Mesh(
+            dev.reshape(s_mesh, dev.size // s_mesh),
+            (scenario_axis, island_axis),
+        )
+    from repro.dist.sharding import MeshContext
+
+    ctx = MeshContext(
+        mesh,
+        rules={"scenario": (scenario_axis,), "island": (island_axis,)},
+    )
+    n_isl = mesh.shape[island_axis]
+    if S % mesh.shape[scenario_axis]:
+        raise ValueError(
+            f"{S} scenarios not divisible by scenario mesh axis "
+            f"{mesh.shape[scenario_axis]}"
+        )
+
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = jax.random.split(key, n_isl)                     # (I, 2)
+    keys = jnp.broadcast_to(keys, (S,) + keys.shape)        # (S, I, 2)
+    # Per-scenario gene boxes: vmap the init over scenarios x islands.
+    pops = jax.vmap(
+        lambda row, k: jax.vmap(
+            lambda kk: nsga2.init_population(row, cfg, kk)
+        )(k)
+    )(table, keys)
+
+    def shard_body(tbl, pops, keys):
+        # tbl leaves: (S_loc, ...); pops/keys: (S_loc, 1, ...) — one
+        # island per device along island_axis, local scenarios vmapped.
+        def one_scenario(row, pop, key):
+            island = _island_body(
+                row, cfg, n_isl, island_axis, rounds, gens_per_round,
+                n_migrants,
+            )
+            pop, archive = island(pop[0], key[0])
+            return pop[None], archive[None]
+
+        return jax.vmap(one_scenario)(tbl, pops, keys)
+
+    from repro.dist.compat import shard_map
+
+    # Logical layout via repro.dist: scenarios on scenario_axis, islands
+    # on island_axis; the table's per-scenario params shard with their
+    # scenario block.
+    scen_spec = ctx.spec(("scenario",), (S,))
+    both_spec = ctx.spec(("scenario", "island"), (S, n_isl))
+    body = shard_map(
+        shard_body,
+        mesh=mesh,
+        in_specs=(scen_spec, both_spec, both_spec),
+        out_specs=(both_spec, both_spec),
+        check_vma=False,
+    )
+    pops, archives = jax.jit(body)(table, pops, keys)
+    return [
+        _islands_result(table.row(i), pops[i], archives[i]) for i in range(S)
+    ]
 
 
 def timed_explore(precision: str, w_store: int, cfg=None) -> dict:

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from . import components as c
@@ -27,6 +28,7 @@ from .cells import CellLibrary, TechParams, TSMC28, CALIBRATED
 from .precision import Precision
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class MacroCosts:
     """NOR-normalized macro costs. All fields broadcast together."""
@@ -182,6 +184,7 @@ def macro_costs(
     return int_macro(N, H, L, k, prec.B_w, prec.B_x, lib, **kw)
 
 
+@jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class PhysicalMetrics:
     area_mm2: jnp.ndarray

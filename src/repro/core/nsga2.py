@@ -4,23 +4,32 @@ This is the paper's "MOGA-based design space explorer" core: 4 objectives
 [A, D, E, -T], constrained domination for the storage-equality-derived
 box violation, binary tournament selection, uniform crossover and
 step/reset mutation on the integer log2 genome, (mu + lambda) elitist
-survival.  The entire generations loop is a single ``lax.fori_loop``
+survival.  The entire generations loop is a single ``lax.scan``
 inside one ``jax.jit`` — a full DSE run takes milliseconds, vs. the
 paper's 30-minute budget per (precision, W_store) point.
+
+Scenario parameters (bit-widths, bounds) are *traced data* — a
+:class:`repro.core.scenario.ScenarioTable` row — so the whole algorithm
+is ``vmap``-able over a leading scenario axis: :func:`run_batched`
+evolves S scenarios' populations in ONE jitted program (one trace, S x P
+individuals).  :func:`run_static` keeps the historical one-jit-per-space
+path as the equivalence/benchmark reference, and :func:`run_unjitted`
+the paper-faithful eager baseline.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from .pareto import crowding_distance, non_dominated_sort
-from .space import DesignSpace, N_GENES
+from . import scenario as scen_mod
+from .pareto import crowding_distance, non_dominated_sort, pareto_front_mask
+from .scenario import N_GENES, ScenarioTable, as_row
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,7 +40,10 @@ class NSGA2Config:
     p_mutate: float = 0.3
     p_step_mutate: float = 0.5   # fraction of mutations that are +/-1 steps
     seed: int = 0
-    use_pallas: bool = False     # dominance matrix via the pareto_rank kernel
+    # Dominance matrix via the pareto_rank Pallas kernel: compiled on TPU,
+    # interpreter-lowered to XLA on CPU (bit-exact either way, and tested
+    # against the jnp path).  Set False to force the pure-jnp dominance.
+    use_pallas: bool = True
 
 
 @dataclasses.dataclass
@@ -92,18 +104,24 @@ def _survivors(F, v, comb, P, use_pallas):
     return comb[order[:P]]
 
 
-def make_step(space: DesignSpace, cfg: NSGA2Config):
-    lo = jnp.asarray(space.gene_lo)
-    hi = jnp.asarray(space.gene_hi)
+def make_step(space_or_row, cfg: NSGA2Config):
+    """One NSGA-II generation as a ``lax.scan`` body.
+
+    ``space_or_row`` may be a ``DesignSpace`` (bounds become trace
+    constants, the historical behavior) or a ``ScenarioTable`` row of
+    tracers (the batched path, ``vmap``-ed over scenarios)."""
+    row = as_row(space_or_row)
+    lo = jnp.asarray(row.gene_lo)
+    hi = jnp.asarray(row.gene_hi)
 
     def step(carry, gen):
         pop, key = carry
         key, kc = jax.random.split(jax.random.fold_in(key, gen))
-        F, v = space.evaluate(pop)
+        F, v = scen_mod.evaluate(row, pop)
         ranks, crowd = _rank_and_crowd(F, v, cfg.use_pallas)
         children = _make_children(kc, pop, ranks, crowd, cfg, lo, hi)
         comb = jnp.concatenate([pop, children], axis=0)
-        Fc, vc = space.evaluate(comb)
+        Fc, vc = scen_mod.evaluate(row, comb)
         pop = _survivors(Fc, vc, comb, cfg.pop_size, cfg.use_pallas)
         # Children are emitted for the elitist archive: the returned front
         # is extracted from *every candidate ever evaluated*, so a design
@@ -113,82 +131,175 @@ def make_step(space: DesignSpace, cfg: NSGA2Config):
     return step
 
 
-def init_population(space: DesignSpace, cfg: NSGA2Config, key) -> jnp.ndarray:
-    lo = jnp.asarray(space.gene_lo)
-    hi = jnp.asarray(space.gene_hi)
+def init_population(space_or_row, cfg: NSGA2Config, key) -> jnp.ndarray:
+    row = as_row(space_or_row)
+    lo = jnp.asarray(row.gene_lo)
+    hi = jnp.asarray(row.gene_hi)
     return jax.random.randint(
         key, (cfg.pop_size, N_GENES), lo[None, :], hi[None, :] + 1, jnp.int32
     )
 
 
-@partial(jax.jit, static_argnums=(0, 1))
-def _run_jit(space: DesignSpace, cfg: NSGA2Config, key):
-    pop = init_population(space, cfg, key)
-    step = make_step(space, cfg)
+def _evolve(row, cfg: NSGA2Config, key):
+    """Init + generations scan for one scenario row.
+
+    Shared by the batched (vmap-ed) and static (per-space jit) runners so
+    both execute the identical program modulo whether scenario params are
+    tracers or constants.  Final population ranking happens eagerly on
+    the host (:func:`_final_ranks`): it would otherwise lower a second
+    copy of the rank/crowd graph outside the scan and roughly double the
+    compile time of the batched program."""
+    pop = init_population(row, cfg, key)
+    step = make_step(row, cfg)
     (pop, _), visited = lax.scan(step, (pop, key), jnp.arange(cfg.generations))
-    F, v = space.evaluate(pop)
-    ranks, _ = _rank_and_crowd(F, v, cfg.use_pallas)
+    F, v = scen_mod.evaluate(row, pop)
     archive = jnp.concatenate([visited.reshape(-1, N_GENES), pop], axis=0)
-    return pop, F, v, ranks, archive
+    return pop, F, v, archive
 
 
-def run(space: DesignSpace, cfg: NSGA2Config = NSGA2Config()) -> NSGA2Result:
-    """Run NSGA-II; the returned front is the non-dominated subset of the
-    *elitist archive* (every candidate ever evaluated), deduplicated —
-    a design visited early and later crowded out is never lost."""
-    from .pareto import pareto_front_mask
+@partial(jax.jit, static_argnums=(2,))
+def _ranks_jit(F, v, use_pallas: bool):
+    dom = None
+    if use_pallas:
+        from repro.kernels import ops as kops
 
-    key = jax.random.PRNGKey(cfg.seed)
-    pop, F, v, ranks, archive = _run_jit(space, cfg, key)
-    pop, F, v, ranks = map(np.asarray, (pop, F, v, ranks))
-    # Dedup on host, then evaluate the archive *outside* the jitted loop:
-    # in-loop float32 reassociation can differ by 1 ULP, which would make
-    # objectives inconsistent with external (oracle) evaluation.
-    arch = np.unique(np.asarray(archive), axis=0)
-    aF, av = space.evaluate(jnp.asarray(arch))
-    mask = np.asarray(pareto_front_mask(aF, av)) & (np.asarray(av) <= 0.0)
-    fg = arch[mask]
-    fF = np.asarray(aF)[mask]
+        dom = kops.dominance_matrix(F, v)
+    return non_dominated_sort(F, v, dom=dom)
+
+
+def _final_ranks(F, v, cfg: NSGA2Config) -> np.ndarray:
+    return np.asarray(_ranks_jit(jnp.asarray(F), jnp.asarray(v), cfg.use_pallas))
+
+
+@jax.jit
+def _archive_front_jit(row, genes):
+    """Evaluate a (bucket-padded) archive and mask its feasible Pareto
+    front in one compiled program.  Padding rows are copies of row 0, so
+    they change no real entry's domination status."""
+    F, v = scen_mod.evaluate(row, genes)
+    mask = pareto_front_mask(F, v) & (v <= 0.0)
+    return F, v, mask
+
+
+@partial(jax.jit, static_argnums=(1,))
+def _run_batched_jit(table: ScenarioTable, cfg: NSGA2Config, keys):
+    return jax.vmap(lambda row, key: _evolve(row, cfg, key))(table, keys)
+
+
+@partial(jax.jit, static_argnums=(0, 1))
+def _run_static_jit(space, cfg: NSGA2Config, key):
+    return _evolve(space.scenario, cfg, key)
+
+
+def _extract_result(
+    row, pop, F, v, ranks, archive, bucket=None, deduped=False
+) -> NSGA2Result:
+    """Host-side front extraction from the elitist archive.
+
+    Dedup on host, then re-evaluate the archive through the shared
+    bucketed front program (``_archive_front_jit``) — the same program
+    the brute-force oracle uses — instead of trusting in-loop values:
+    in-loop float32 fusion can differ by 1 ULP, which would make
+    objectives inconsistent with external (oracle) evaluation.
+
+    ``bucket`` optionally pins the padded archive shape so several
+    scenarios share one compile, and ``deduped=True`` skips the
+    ``np.unique`` for archives the caller already deduplicated (see
+    :func:`run_batched`)."""
+    if deduped:
+        arch = np.asarray(archive).reshape(-1, N_GENES)
+    else:
+        arch = np.unique(np.asarray(archive).reshape(-1, N_GENES), axis=0)
+    arch_p, n = scen_mod.pad_to_bucket(arch, bucket)
+    aF, av, mask = jax.tree.map(
+        lambda a: np.asarray(a)[:n],
+        _archive_front_jit(row, jnp.asarray(arch_p)),
+    )
     return NSGA2Result(
-        genes=pop,
-        objectives=F,
-        violation=v,
-        ranks=ranks,
-        front_genes=fg,
-        front_objectives=fF,
+        genes=np.asarray(pop),
+        objectives=np.asarray(F),
+        violation=np.asarray(v),
+        ranks=np.asarray(ranks),
+        front_genes=arch[mask],
+        front_objectives=np.asarray(aF)[mask],
     )
 
 
-def run_unjitted(space: DesignSpace, cfg: NSGA2Config = NSGA2Config()) -> NSGA2Result:
+def run_batched(
+    table: ScenarioTable, cfg: NSGA2Config = NSGA2Config()
+) -> List[NSGA2Result]:
+    """Evolve ALL scenarios of ``table`` in one jitted, vmapped program.
+
+    Each scenario uses the same RNG stream as a standalone
+    :func:`run`/:func:`run_static` call with the same config, so the
+    batched fronts match the sequential per-scenario path exactly."""
+    S = len(table)
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = jnp.broadcast_to(key, (S,) + key.shape)
+    pops, F, v, archives = _run_batched_jit(table, cfg, keys)
+    # Dedup every scenario's archive first, then extract all fronts
+    # through ONE padded shape: S scenarios share a single
+    # ``_archive_front_jit`` compile instead of one per distinct size.
+    arches = [
+        np.unique(np.asarray(archives[i]).reshape(-1, N_GENES), axis=0)
+        for i in range(S)
+    ]
+    bucket = scen_mod._bucket(max(a.shape[0] for a in arches))
+    return [
+        _extract_result(
+            table.row(i), pops[i], F[i], v[i],
+            _final_ranks(F[i], v[i], cfg), arches[i],
+            bucket=bucket, deduped=True,
+        )
+        for i in range(S)
+    ]
+
+
+def run(space, cfg: NSGA2Config = NSGA2Config()) -> NSGA2Result:
+    """Run NSGA-II for one scenario through the batched pipeline (S=1).
+
+    The returned front is the non-dominated subset of the *elitist
+    archive* (every candidate ever evaluated), deduplicated — a design
+    visited early and later crowded out is never lost."""
+    return run_batched(space.to_table(), cfg)[0]
+
+
+def run_static(space, cfg: NSGA2Config = NSGA2Config()) -> NSGA2Result:
+    """Historical per-scenario path: ``space`` is a *static* jit argument,
+    so every distinct (precision, W_store) re-traces and re-compiles.
+
+    Kept as the sequential reference that :func:`run_batched` is tested
+    against (bit-identical fronts) and benchmarked against
+    (``benchmarks/bench_dse.py``)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    pop, F, v, archive = _run_static_jit(space, cfg, key)
+    return _extract_result(
+        space.scenario, pop, F, v, _final_ranks(F, v, cfg), archive
+    )
+
+
+def run_unjitted(space, cfg: NSGA2Config = NSGA2Config()) -> NSGA2Result:
     """Paper-faithful baseline: eager per-generation dispatch (no jit of
     the generations loop).  Identical operators and results modulo RNG
     stream; exists so EXPERIMENTS.md §Perf-DSE can quantify the win of
     compiling the whole DSE into one XLA program."""
-    from .pareto import pareto_front_mask
-
+    row = space.scenario
     key = jax.random.PRNGKey(cfg.seed)
-    lo = jnp.asarray(space.gene_lo)
-    hi = jnp.asarray(space.gene_hi)
-    pop = init_population(space, cfg, key)
+    lo = jnp.asarray(row.gene_lo)
+    hi = jnp.asarray(row.gene_hi)
+    pop = init_population(row, cfg, key)
     visited = [np.asarray(pop)]
     for gen in range(cfg.generations):
         key, kc = jax.random.split(jax.random.fold_in(key, gen))
-        F, v = space.evaluate(pop)
+        F, v = scen_mod.evaluate(row, pop)
         ranks, crowd = _rank_and_crowd(F, v, cfg.use_pallas)
         children = _make_children(kc, pop, ranks, crowd, cfg, lo, hi)
         comb = jnp.concatenate([pop, children], axis=0)
-        Fc, vc = space.evaluate(comb)
+        Fc, vc = scen_mod.evaluate(row, comb)
         pop = _survivors(Fc, vc, comb, cfg.pop_size, cfg.use_pallas)
         pop.block_until_ready()
         visited.append(np.asarray(children))
-    F, v = space.evaluate(pop)
+    F, v = scen_mod.evaluate(row, pop)
     ranks, _ = _rank_and_crowd(F, v, cfg.use_pallas)
-
-    arch = np.unique(np.concatenate(visited + [np.asarray(pop)]), axis=0)
-    aF, av = space.evaluate(jnp.asarray(arch))
-    mask = np.asarray(pareto_front_mask(aF, av)) & (np.asarray(av) <= 0.0)
-    return NSGA2Result(
-        genes=np.asarray(pop), objectives=np.asarray(F),
-        violation=np.asarray(v), ranks=np.asarray(ranks),
-        front_genes=arch[mask], front_objectives=np.asarray(aF)[mask],
-    )
+    archive = np.concatenate(visited + [np.asarray(pop)])
+    return _extract_result(row, pop, F, v, ranks, archive)

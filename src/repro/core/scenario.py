@@ -1,0 +1,286 @@
+"""Array-valued scenario parameters: the batched DSE evaluation pipeline.
+
+Historically every (precision, W_store) scenario was a frozen
+``DesignSpace`` whose bit-widths and bounds were *Python closure
+constants*, so ``jax.jit`` specialized one XLA program per scenario and
+``explore_multi`` re-traced/re-compiled NSGA-II ``S`` times.  A
+:class:`ScenarioTable` lifts those constants into stacked ``(S,)``
+arrays — precision bit-widths, the log2 storage budget, derived-gene
+bounds — so scenario parameters become *traced data*: one program
+evaluates (and evolves, via ``jax.vmap`` in ``nsga2.run_batched``) all
+scenarios at once.
+
+Everything here is shape-polymorphic over the scenario prefix: table
+fields may be ``(S,)`` arrays (whole-table evaluation), scalars (a
+single row, e.g. under ``vmap`` or from ``DesignSpace.scenario``), or
+any leading shape in between.  ``DesignSpace.evaluate`` delegates to
+:func:`evaluate`, so the sequential, batched, brute-force-oracle and
+island paths all share ONE evaluation pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cells import CellLibrary, TSMC28
+from .macros import MacroCosts, fp_macro, int_macro
+from .precision import Precision, get as get_precision
+
+N_GENES = 3  # (j, h, kk)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScenarioTable:
+    """Stacked per-scenario cost-model parameters and genome bounds.
+
+    Data fields carry a leading scenario prefix (``(S,)`` for a table,
+    ``()`` for a row); metadata fields are static and must be uniform
+    across the scenarios of one table (they select the trace, not the
+    data).
+    """
+
+    # --- traced data (leading scenario prefix) -----------------------------
+    b_w: jnp.ndarray          # int32 — weight bits held in the SRAM array
+    b_x: jnp.ndarray          # int32 — streamed input bits (B_M for FP)
+    b_e: jnp.ndarray          # int32 — exponent bits (0 for INT)
+    is_fp: jnp.ndarray        # bool  — FP (Table VI) vs INT (Table V)
+    s_log2: jnp.ndarray       # int32 — log2(W_store)
+    l_max_log2: jnp.ndarray   # int32 — box bound on the derived gene l
+    gene_lo: jnp.ndarray      # int32 (..., 3)
+    gene_hi: jnp.ndarray      # int32 (..., 3)
+    # --- static metadata ---------------------------------------------------
+    lib: CellLibrary = dataclasses.field(
+        metadata=dict(static=True), default=TSMC28
+    )
+    include_selection_mux: bool = dataclasses.field(
+        metadata=dict(static=True), default=False
+    )
+    # Whether any/all scenarios are floating point — static so INT-only
+    # (or FP-only) tables trace exactly the single-dispatch cost model.
+    any_fp: bool = dataclasses.field(metadata=dict(static=True), default=False)
+    all_fp: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    # --- construction ------------------------------------------------------
+    @classmethod
+    def from_specs(
+        cls,
+        scenarios: Sequence[tuple],
+        lib: CellLibrary = TSMC28,
+        include_selection_mux: bool = False,
+        **space_kw,
+    ) -> "ScenarioTable":
+        """Build from ``[(precision, w_store), ...]`` pairs (the
+        ``explore_multi`` scenario list)."""
+        from .space import DesignSpace  # lazy: space.py imports this module
+
+        spaces = [
+            DesignSpace(
+                prec=get_precision(p) if isinstance(p, str) else p,
+                w_store=w,
+                lib=lib,
+                include_selection_mux=include_selection_mux,
+                **space_kw,
+            )
+            for p, w in scenarios
+        ]
+        return cls.from_spaces(spaces)
+
+    @classmethod
+    def from_spaces(cls, spaces: Sequence) -> "ScenarioTable":
+        """Stack ``DesignSpace`` instances into one table.
+
+        Static knobs (cell library, selection-mux model) must agree: they
+        pick the compiled program, not per-scenario data.
+        """
+        if not spaces:
+            raise ValueError("at least one scenario required")
+        lib = spaces[0].lib
+        mux = spaces[0].include_selection_mux
+        for sp in spaces:
+            if sp.lib != lib or sp.include_selection_mux != mux:
+                raise ValueError(
+                    "all scenarios of one table must share lib and "
+                    "include_selection_mux (these are static metadata)"
+                )
+        # Fields are host numpy arrays: concrete even when the table is
+        # built under an active jit trace (e.g. the cached
+        # ``DesignSpace.scenario`` property inside ``nsga2.run_static``);
+        # jax converts them to device constants at first use.
+        i32 = lambda xs: np.asarray(xs, np.int32)  # noqa: E731
+        fps = [bool(sp.prec.is_fp) for sp in spaces]
+        return cls(
+            b_w=i32([sp.prec.B_w for sp in spaces]),
+            b_x=i32([sp.prec.B_x for sp in spaces]),
+            b_e=i32([sp.prec.B_E for sp in spaces]),
+            is_fp=np.asarray(fps, np.bool_),
+            s_log2=i32([sp.s_log2 for sp in spaces]),
+            l_max_log2=i32([sp.l_max_log2 for sp in spaces]),
+            gene_lo=np.stack([sp.gene_lo for sp in spaces]).astype(np.int32),
+            gene_hi=np.stack([sp.gene_hi for sp in spaces]).astype(np.int32),
+            lib=lib,
+            include_selection_mux=mux,
+            any_fp=any(fps),
+            all_fp=all(fps),
+        )
+
+    # --- shape helpers ------------------------------------------------------
+    def __len__(self) -> int:
+        return int(np.shape(self.b_w)[0]) if np.ndim(self.b_w) else 1
+
+    def row(self, i: int) -> "ScenarioTable":
+        """Scalar-field view of scenario ``i``.
+
+        Indexes on the host (numpy) so the row stays concrete even when
+        first accessed under an active jit trace (e.g. the cached
+        ``DesignSpace.scenario`` property inside ``nsga2.run_static``)."""
+        return jax.tree.map(lambda a: np.asarray(a)[i], self)
+
+
+def as_row(space_or_row):
+    """Coerce a ``DesignSpace`` (or pass through a table/row) for the
+    row-wise entry points below."""
+    if isinstance(space_or_row, ScenarioTable):
+        return space_or_row
+    return space_or_row.scenario  # DesignSpace's cached scalar row
+
+
+def _pref(x, genes: jnp.ndarray) -> jnp.ndarray:
+    """Right-pad a scenario-prefix field with singleton axes so it
+    broadcasts against per-genome arrays derived from ``genes`` (shape
+    ``prefix + pop_dims + (N_GENES,)``)."""
+    x = jnp.asarray(x)
+    return x.reshape(x.shape + (1,) * (genes.ndim - 1 - x.ndim))
+
+
+# --- decoding ----------------------------------------------------------------
+def derived_l(table: ScenarioTable, genes: jnp.ndarray) -> jnp.ndarray:
+    """The storage-equality-derived gene: l = log2(W_store) - j - h."""
+    return _pref(table.s_log2, genes) - genes[..., 0] - genes[..., 1]
+
+
+def decode(table: ScenarioTable, genes: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """genes ``(..., 3)`` int32 -> (N, H, L, k) float32 arrays.
+
+    ``l`` is clamped into its box for cost evaluation; the true violation
+    is reported separately by :func:`violation`.
+    """
+    one = jnp.int32(1)
+    j = genes[..., 0].astype(jnp.int32)
+    h = genes[..., 1].astype(jnp.int32)
+    l = jnp.clip(
+        derived_l(table, genes).astype(jnp.int32),
+        0,
+        _pref(table.l_max_log2, genes),
+    )
+    kk = genes[..., 2].astype(jnp.int32)
+    # Integer bit-shifts: jnp.exp2 is inexact on some backends.
+    N = (_pref(table.b_w, genes).astype(jnp.int32) * (one << j)).astype(
+        jnp.float32
+    )
+    return (
+        N,
+        (one << h).astype(jnp.float32),
+        (one << l).astype(jnp.float32),
+        (one << kk).astype(jnp.float32),
+    )
+
+
+def violation(table: ScenarioTable, genes: jnp.ndarray) -> jnp.ndarray:
+    l = derived_l(table, genes).astype(jnp.float32)
+    l_max = _pref(table.l_max_log2, genes).astype(jnp.float32)
+    return jnp.maximum(-l, 0.0) + jnp.maximum(l - l_max, 0.0)
+
+
+# --- evaluation --------------------------------------------------------------
+def costs(table: ScenarioTable, genes: jnp.ndarray) -> MacroCosts:
+    """Whole-macro costs with scenario parameters as traced data.
+
+    INT-only / FP-only tables trace exactly the corresponding Table V /
+    Table VI model; mixed tables compute both and select per scenario
+    (the models share the integer core, so the overhead is the small FP
+    pre-align/convert term).
+    """
+    N, H, L, k = decode(table, genes)
+    b_w = _pref(table.b_w, genes).astype(jnp.float32)
+    b_x = _pref(table.b_x, genes).astype(jnp.float32)
+    b_e = _pref(table.b_e, genes).astype(jnp.float32)
+    kw = dict(lib=table.lib, include_selection_mux=table.include_selection_mux)
+    if not table.any_fp:
+        return int_macro(N, H, L, k, b_w, b_x, **kw)
+    if table.all_fp:
+        return fp_macro(N, H, L, k, b_w, b_e, b_x, **kw)
+    ci = int_macro(N, H, L, k, b_w, b_x, **kw)
+    cf = fp_macro(N, H, L, k, b_w, b_e, b_x, **kw)
+    fp = _pref(table.is_fp, genes)
+    pick = lambda a, b: jnp.where(fp, a, b)  # noqa: E731
+    return MacroCosts(
+        **{
+            f.name: pick(getattr(cf, f.name), getattr(ci, f.name))
+            for f in dataclasses.fields(MacroCosts)
+        }
+    )
+
+
+def evaluate(
+    table: ScenarioTable, genes: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """genes ``(..., 3)`` -> (objectives ``(..., 4)`` [A, D, E, -T],
+    violation ``(...,)``) — THE evaluation pipeline: every consumer
+    (sequential, batched, islands, brute-force oracle) routes through
+    here."""
+    return costs(table, genes).objectives(), violation(table, genes)
+
+
+# --- host-side (out-of-loop) evaluation --------------------------------------
+@jax.jit
+def _evaluate_jit(row: ScenarioTable, genes: jnp.ndarray):
+    return evaluate(row, genes)
+
+
+def _bucket(n: int) -> int:
+    """Next power of two: pads host-side gene sets to a handful of shapes
+    so the jitted evaluation compiles once, not once per archive size."""
+    return 1 << max(int(math.ceil(math.log2(max(n, 1)))), 0)
+
+
+def pad_to_bucket(
+    genes: np.ndarray, bucket: int | None = None
+) -> Tuple[np.ndarray, int]:
+    """Pad ``genes`` to ``bucket`` rows (default: next power of two).
+
+    Callers evaluating several gene sets back-to-back can pass one shared
+    ``bucket`` (>= every set's length) so all sets hit the SAME compiled
+    shape — one jit compile instead of one per distinct size.  Padding
+    rows are copies of row 0: evaluation is elementwise per row, so they
+    change no real entry's values or domination status."""
+    genes = np.asarray(genes).reshape(-1, N_GENES)
+    n = genes.shape[0]
+    if bucket is None:
+        bucket = _bucket(n)
+    elif bucket < n:
+        raise ValueError(f"bucket {bucket} < {n} rows")
+    pad = bucket - n
+    if pad:
+        genes = np.concatenate([genes, np.repeat(genes[:1], pad, axis=0)])
+    return genes, n
+
+
+def evaluate_host(
+    row: ScenarioTable, genes: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Jitted, shape-bucketed evaluation for host-side consumers (archive
+    fronts, the brute-force oracle): genes ``(n, 3)`` -> numpy
+    ``(F (n, 4), v (n,))``.
+
+    Rows are *data* to the jit, so all scenarios of a table — and every
+    same-bucket archive — share one compiled program instead of paying
+    eager per-op dispatch."""
+    gp, n = pad_to_bucket(genes)
+    F, v = _evaluate_jit(row, jnp.asarray(gp))
+    return np.asarray(F)[:n], np.asarray(v)[:n]

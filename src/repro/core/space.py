@@ -24,11 +24,11 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from . import scenario as scenario_mod
 from .cells import CellLibrary, TSMC28
-from .macros import MacroCosts, macro_costs
+from .macros import MacroCosts
 from .precision import Precision
-
-N_GENES = 3  # (j, h, kk)
+from .scenario import N_GENES, ScenarioTable  # noqa: F401  (re-export)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,9 +67,27 @@ class DesignSpace:
     def gene_hi(self) -> np.ndarray:
         return np.array([self.j_max, self.h_max_log2, self.kk_max], np.int32)
 
+    # --- the scenario row: bridge into the batched pipeline ------------------
+    @property
+    def scenario(self) -> ScenarioTable:
+        """This space as a scalar-field :class:`ScenarioTable` row.
+
+        Cached per instance (the space is frozen) so repeated evaluation
+        reuses the same arrays and hits the same jit caches.
+        """
+        row = getattr(self, "_scenario_row", None)
+        if row is None:
+            row = scenario_mod.ScenarioTable.from_spaces([self]).row(0)
+            object.__setattr__(self, "_scenario_row", row)
+        return row
+
+    def to_table(self) -> ScenarioTable:
+        """This space as a 1-scenario table (leading axis kept)."""
+        return scenario_mod.ScenarioTable.from_spaces([self])
+
     # --- decoding ----------------------------------------------------------
     def derived_l(self, genes: jnp.ndarray) -> jnp.ndarray:
-        return self.s_log2 - genes[..., 0] - genes[..., 1]
+        return scenario_mod.derived_l(self.scenario, genes)
 
     def decode(self, genes: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
         """genes (..., 3) int32 -> (N, H, L, k) float32 arrays.
@@ -77,35 +95,21 @@ class DesignSpace:
         ``l`` is clamped into its box for cost evaluation; the true
         violation is reported separately by :meth:`violation`.
         """
-        one = jnp.int32(1)
-        j = genes[..., 0].astype(jnp.int32)
-        h = genes[..., 1].astype(jnp.int32)
-        l = jnp.clip(self.derived_l(genes).astype(jnp.int32), 0, self.l_max_log2)
-        kk = genes[..., 2].astype(jnp.int32)
-        # Integer bit-shifts: jnp.exp2 is inexact on some backends.
-        N = (self.prec.B_w * (one << j)).astype(jnp.float32)
-        return (
-            N,
-            (one << h).astype(jnp.float32),
-            (one << l).astype(jnp.float32),
-            (one << kk).astype(jnp.float32),
-        )
+        return scenario_mod.decode(self.scenario, genes)
 
     def violation(self, genes: jnp.ndarray) -> jnp.ndarray:
-        l = self.derived_l(genes).astype(jnp.float32)
-        return jnp.maximum(-l, 0.0) + jnp.maximum(l - self.l_max_log2, 0.0)
+        return scenario_mod.violation(self.scenario, genes)
 
     # --- evaluation ----------------------------------------------------------
     def costs(self, genes: jnp.ndarray) -> MacroCosts:
-        N, H, L, k = self.decode(genes)
-        return macro_costs(
-            N, H, L, k, self.prec, self.lib,
-            include_selection_mux=self.include_selection_mux,
-        )
+        return scenario_mod.costs(self.scenario, genes)
 
     def evaluate(self, genes: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """genes (..., 3) -> (objectives (..., 4) [A, D, E, -T], violation)."""
-        return self.costs(genes).objectives(), self.violation(genes)
+        """genes (..., 3) -> (objectives (..., 4) [A, D, E, -T], violation).
+
+        Delegates to :func:`repro.core.scenario.evaluate` — the single
+        pipeline shared with the batched multi-scenario explorer."""
+        return scenario_mod.evaluate(self.scenario, genes)
 
     # --- exhaustive oracle ----------------------------------------------------
     def enumerate_feasible(self) -> np.ndarray:

@@ -6,17 +6,25 @@ feature of the framework: ``plan(arch_name, precision)`` extracts the
 arch's MVM workloads, explores the (precision, W_store) space, distills
 by the user constraint set, and reports macro count / total area / power
 / per-token latency for serving the whole model from DCIM.
+
+``precision`` may be a single format or a list: multiple candidate
+precisions (and optionally multiple ``w_store`` budgets) are explored in
+ONE batched ``explore_multi`` call — a single jitted NSGA-II over the
+scenario table — and distillation then picks across the merged INT+FP
+candidate set, exactly the paper's Fig. 4 flow.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
 
 from repro.configs import get_config
 from repro.core import explorer, nsga2
 from repro.core.cells import CALIBRATED, TechParams
-from repro.core.precision import get as get_precision
+from repro.core.precision import Precision, get as get_precision
 from repro.sim.functional import DCIMMacroSim
 
 from .workloads import ArchWorkload, extract
@@ -45,20 +53,33 @@ class MacroPlan:
 
 def plan(
     arch: str,
-    precision: str = "int8",
-    w_store: int = 65536,
+    precision: Union[str, Precision, Sequence] = "int8",
+    w_store: Union[int, Sequence[int]] = 65536,
     cfg_nsga: Optional[nsga2.NSGA2Config] = None,
     tech: TechParams = CALIBRATED,
     activity: float = 0.1,
     max_area_mm2: Optional[float] = None,
     sort_by: str = "edp",
 ) -> MacroPlan:
-    """Provision DCIM macros of one explored design for a whole arch."""
+    """Provision DCIM macros of one explored design for a whole arch.
+
+    With a list of precisions (and/or ``w_store`` budgets) the full
+    scenario cross-product runs as ONE batched NSGA-II; distillation
+    then selects the winning design across the merged candidate set."""
     lmcfg = get_config(arch)
     wl: ArchWorkload = extract(lmcfg)
 
-    pts = explorer.explore(
-        precision, w_store,
+    if isinstance(precision, (str, Precision)):
+        precisions = [precision]
+    else:
+        precisions = list(precision)
+    if isinstance(w_store, (int, np.integer)):
+        w_stores = [int(w_store)]
+    else:
+        w_stores = [int(w) for w in w_store]
+    scenarios = [(p, w) for p in precisions for w in w_stores]
+    pts = explorer.explore_multi(
+        scenarios,
         cfg_nsga or nsga2.NSGA2Config(pop_size=96, generations=48),
         tech=tech, activity=activity,
     )
@@ -86,7 +107,7 @@ def plan(
 
     return MacroPlan(
         arch=arch,
-        precision=precision,
+        precision=pt.precision,  # the distillation winner's format
         point=pt,
         n_macros=n_macros,
         total_area_mm2=pt.area_mm2 * n_macros,

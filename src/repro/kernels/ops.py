@@ -23,11 +23,26 @@ def _interpret_default() -> bool:
 
 # --- pareto_rank -------------------------------------------------------------
 def dominance_matrix(F, violation=None, interpret: bool | None = None):
-    """(P, M) objectives -> (P, P) bool constrained-dominance matrix."""
+    """(P, M) objectives -> (P, P) bool constrained-dominance matrix.
+
+    On TPU this is the compiled Pallas ``pareto_rank`` kernel.  On CPU
+    (``interpret=None`` auto-detection) it falls back to the broadcasted
+    XLA dominance from ``repro.core.pareto`` — bit-identical (tested in
+    tests/test_kernels.py) and much cheaper to compile than interpreter
+    mode, which matters when NSGA-II vmaps the dominance over a scenario
+    axis.  Pass ``interpret=True`` to force the Pallas interpreter (the
+    kernel-parity tests do)."""
+    if interpret is None and _interpret_default():
+        from repro.core import pareto
+
+        return pareto.dominance_matrix(
+            jnp.asarray(F),
+            None if violation is None else jnp.asarray(violation),
+        )
     out = _rank.dominance_matrix_pallas(
         jnp.asarray(F),
         None if violation is None else jnp.asarray(violation),
-        interpret=_interpret_default() if interpret is None else interpret,
+        interpret=False if interpret is None else interpret,
     )
     return out.astype(jnp.bool_)
 

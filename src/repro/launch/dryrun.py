@@ -17,8 +17,6 @@ Usage:
 """
 # (no __future__ import: the XLA_FLAGS lines must be the first statements)
 import argparse
-import dataclasses
-import json
 import pathlib
 import re
 import time
@@ -32,6 +30,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
+from repro.core.results import ResultStore
 from repro.dist import sharding as shd
 from repro.launch import specs as specs_mod
 from repro.launch.mesh import make_production_mesh
@@ -291,9 +290,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: pathlib.Path, force: bool = False,
              overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
-    out_path = out_dir / f"{arch}__{shape_name}__{mesh_tag}.json"
-    if out_path.exists() and not force:
-        return json.loads(out_path.read_text())
+    store = ResultStore(out_dir)
+    name = f"{arch}__{shape_name}__{mesh_tag}"
+    if name in store and not force:
+        return store.get(name)
 
     entry = configs.entry(arch)
     shape = configs.SHAPES[shape_name]
@@ -304,13 +304,14 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     }
     if shape_name not in entry.shape_names():
         rec["status"] = "skipped:full-attention-500k"
-        out_path.write_text(json.dumps(rec, indent=2))
+        store.put(name, rec, kind="dryrun")
         return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = entry.config(**(overrides or {}))
     if overrides:
         rec["overrides"] = dict(overrides)
+    t_cell = time.time()
     try:
         with shd.use_mesh(mesh):
             t0 = time.time()
@@ -327,7 +328,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec.update(
             analyze_compiled(
                 lowered, compiled,
-                hlo_path=out_path.with_suffix(".hlo.zst"),
+                hlo_path=store.path(name).with_suffix(".hlo.zst"),
             )
         )
         rec["lower_s"] = round(t1 - t0, 2)
@@ -344,7 +345,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-4000:]
         print(f"[{arch} x {shape_name} x {mesh_tag}] FAILED: {rec['error']}")
-    out_path.write_text(json.dumps(rec, indent=2))
+    store.put(name, rec, kind="dryrun", wall_s=time.time() - t_cell)
     return rec
 
 

@@ -47,7 +47,15 @@ class Engine:
         seed: int = 0,
     ) -> GenerationResult:
         B, P = prompts.shape
-        assert P + n_tokens <= self.max_len
+        if P + n_tokens > self.max_len:
+            # A real error, not an assert: oversize requests must be
+            # rejected in optimized (-O) deployments too.
+            raise ValueError(
+                f"request exceeds engine capacity: prompt length {P} + "
+                f"n_tokens {n_tokens} = {P + n_tokens} > max_len "
+                f"{self.max_len}; shorten the prompt, request fewer "
+                f"tokens, or build the Engine with a larger max_len"
+            )
         caches, logits = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
         key = jax.random.PRNGKey(seed)
         out = [jnp.asarray(prompts)]

@@ -1,0 +1,63 @@
+"""End-to-end ``launch.dryrun`` sweep on the 256/512-chip abstract meshes
+(closes the ROADMAP "exercise dryrun end-to-end" item).
+
+The dry-run pins ``XLA_FLAGS=--xla_force_host_platform_device_count=512``
+before importing jax, so it must run in a subprocess.  By default this
+test sweeps one representative architecture across every input shape on
+BOTH production meshes (single-pod 16x16 = 256 chips and multi-pod
+2x16x16 = 512 chips) and checks the roofline records persisted through
+``repro.core.results.ResultStore``.  Set ``DRYRUN_SWEEP=all`` to run the
+full all-cells sweep (every architecture; ~30-60 min on a laptop-class
+CPU — the configuration CI's slow lane records in CHANGES.md).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_dryrun_sweep_persists_roofline_records(tmp_path):
+    full = os.environ.get("DRYRUN_SWEEP", "") == "all"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--out", str(tmp_path), "--force",
+    ]
+    if not full:
+        cmd += ["--arch", "qwen2.5-3b"]
+    out = subprocess.run(
+        cmd, capture_output=True, text=True, env=env, cwd=REPO,
+        timeout=(6 * 3600 if full else 1800),
+    )
+    assert out.returncode == 0, out.stdout[-1500:] + out.stderr[-1500:]
+    assert "failed=0" in out.stdout
+
+    from repro.core.results import ResultStore
+    from repro.launch.roofline import analyze_record
+
+    store = ResultStore(tmp_path)
+    names = store.names()
+    assert names, "sweep persisted no records"
+    oks = 0
+    for rec in store.records():
+        # Every record carries the store envelope and a cell status.
+        assert rec["_record"]["kind"] == "dryrun"
+        assert rec["status"] == "ok" or rec["status"].startswith("skipped"), (
+            rec.get("arch"), rec.get("error"),
+        )
+        if rec["status"] != "ok":
+            continue
+        oks += 1
+        assert rec["_record"]["wall_s"] > 0
+        assert rec["n_devices"] in (256, 512)
+        # The record must round-trip into the roofline layer.
+        row = analyze_record(rec)
+        assert row.status == "ok"
+        assert row.hlo_flops > 0 and row.model_flops > 0
+    # qwen2.5-3b: train_4k/prefill_32k/decode_32k on both meshes.
+    assert oks >= (40 if full else 6)

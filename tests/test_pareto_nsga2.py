@@ -86,8 +86,13 @@ def int8_space():
 @pytest.fixture(scope="module")
 def oracle(int8_space):
     genes = brute_force_front(int8_space)
-    F, _ = int8_space.evaluate(jnp.asarray(genes))
-    return genes, np.asarray(F)
+    # Evaluate through the shared jitted pipeline (scenario.evaluate_host)
+    # — the same numerics front extraction uses; eager per-op evaluation
+    # can differ by 1 ULP from any jitted program.
+    from repro.core.scenario import evaluate_host
+
+    F, _ = evaluate_host(int8_space.scenario, genes)
+    return genes, F
 
 
 class TestNSGA2:

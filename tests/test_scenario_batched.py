@@ -1,0 +1,268 @@
+"""Batched multi-scenario DSE: ScenarioTable evaluation parity, batched
+vs sequential-loop vs brute-force-oracle front equivalence, scenario x
+island sharding, and the results store."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import explorer, nsga2
+from repro.core.precision import PAPER_SWEEP, get as get_precision
+from repro.core.results import ResultStore, dump_json, to_jsonable
+from repro.core.scenario import ScenarioTable, evaluate, evaluate_host
+from repro.core.space import DesignSpace
+
+# Small W_store budgets: the design spaces stay tiny enough (~100-250
+# feasible genomes) that this NSGA-II budget deterministically covers
+# them (seeded RNG), making exact front == oracle equality a sound
+# assertion.  (pop 64 / gens 32 leaves a couple of corners unvisited.)
+SMALL_SCENARIOS = [
+    ("int8", 16384), ("bf16", 8192), ("int4", 4096),
+    ("fp16", 16384), ("int16", 8192),
+]
+CFG = nsga2.NSGA2Config(pop_size=96, generations=48)
+
+
+def _spaces(scenarios):
+    return [
+        DesignSpace(prec=get_precision(p), w_store=w) for p, w in scenarios
+    ]
+
+
+class TestScenarioTable:
+    def test_from_specs_stacks_per_scenario_params(self):
+        t = ScenarioTable.from_specs(SMALL_SCENARIOS)
+        assert len(t) == len(SMALL_SCENARIOS)
+        assert t.any_fp and not t.all_fp
+        np.testing.assert_array_equal(
+            np.asarray(t.b_w),
+            [sp.prec.B_w for sp in _spaces(SMALL_SCENARIOS)],
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        idx=st.lists(
+            st.integers(0, len(PAPER_SWEEP) - 1), min_size=1, max_size=4
+        ),
+        w_pow=st.integers(12, 17),
+        seed=st.integers(0, 2**16),
+    )
+    def test_table_evaluate_matches_designspace(self, idx, w_pow, seed):
+        """Batched table evaluation == per-scenario DesignSpace.evaluate,
+        elementwise, for random genes and random mixed scenario sets."""
+        scens = [(PAPER_SWEEP[i].name, 2**w_pow) for i in idx]
+        spaces = _spaces(scens)
+        table = ScenarioTable.from_spaces(spaces)
+        rng = np.random.default_rng(seed)
+        genes = rng.integers(0, 12, size=(len(scens), 7, 3)).astype(np.int32)
+        F, v = evaluate(table, jnp.asarray(genes))
+        for i, sp in enumerate(spaces):
+            Fi, vi = sp.evaluate(jnp.asarray(genes[i]))
+            np.testing.assert_array_equal(np.asarray(F)[i], np.asarray(Fi))
+            np.testing.assert_array_equal(np.asarray(v)[i], np.asarray(vi))
+
+    def test_vmap_over_rows_matches_table(self):
+        table = ScenarioTable.from_specs(SMALL_SCENARIOS)
+        genes = jnp.asarray(
+            np.random.default_rng(0).integers(
+                0, 12, size=(len(table), 5, 3)
+            ).astype(np.int32)
+        )
+        F, v = evaluate(table, genes)
+        Fv, vv = jax.vmap(lambda row, g: evaluate(row, g))(table, genes)
+        np.testing.assert_array_equal(np.asarray(F), np.asarray(Fv))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(vv))
+
+    def test_evaluate_host_bucket_invariant(self):
+        """Bucket padding must never change a real row's objectives: the
+        jitted host evaluation is the canonical numerics every front
+        comparison (archive vs oracle) runs through, so results must be
+        identical whatever power-of-two bucket a gene set lands in.
+        (Eager op-by-op evaluation may differ by 1 ULP from any jitted
+        program — that's why ALL comparisons stay inside the pipeline.)"""
+        sp = DesignSpace(prec=get_precision("int8"), w_store=16384)
+        genes = sp.enumerate_feasible()
+        F_full, v_full = evaluate_host(sp.scenario, genes)
+        for n in (1, 2, 3, 100, genes.shape[0]):  # several buckets
+            F, v = evaluate_host(sp.scenario, genes[:n])
+            np.testing.assert_array_equal(F, F_full[:n])
+            np.testing.assert_array_equal(v, v_full[:n])
+        # And it tracks the eager reference to float32 tolerance.
+        Fr, vr = sp.evaluate(jnp.asarray(genes))
+        np.testing.assert_allclose(F_full, np.asarray(Fr), rtol=1e-6)
+        np.testing.assert_allclose(v_full, np.asarray(vr), rtol=1e-6)
+
+    def test_mixed_row_trace_matches_pure_row_trace(self):
+        """An INT scenario evaluated through a mixed INT/FP table's
+        where-select program must equal the pure INT program bitwise —
+        otherwise batched mixed sweeps would drift from single-scenario
+        runs."""
+        sp = DesignSpace(prec=get_precision("int8"), w_store=16384)
+        genes = sp.enumerate_feasible()
+        t = ScenarioTable.from_specs([("int8", 16384), ("bf16", 8192)])
+        F_mix, v_mix = evaluate_host(t.row(0), genes)
+        F_pure, v_pure = evaluate_host(sp.scenario, genes)
+        np.testing.assert_array_equal(F_mix, F_pure)
+        np.testing.assert_array_equal(v_mix, v_pure)
+
+    def test_mixed_static_knobs_rejected(self):
+        a = DesignSpace(prec=get_precision("int8"), w_store=4096)
+        b = DesignSpace(
+            prec=get_precision("int8"), w_store=4096,
+            include_selection_mux=True,
+        )
+        with pytest.raises(ValueError, match="static metadata"):
+            ScenarioTable.from_spaces([a, b])
+
+
+class TestBatchedEquivalence:
+    @pytest.fixture(scope="class")
+    def batched_results(self):
+        table = ScenarioTable.from_specs(SMALL_SCENARIOS)
+        return nsga2.run_batched(table, CFG)
+
+    def test_one_trace_for_all_scenarios(self, batched_results):
+        """S scenarios execute as ONE jitted batched program: the cache
+        holds a single trace regardless of S (acceptance criterion)."""
+        n0 = nsga2._run_batched_jit._cache_size()
+        table = ScenarioTable.from_specs(SMALL_SCENARIOS)
+        nsga2.run_batched(table, CFG)
+        # Same (shape, config) signature -> no additional trace.
+        assert nsga2._run_batched_jit._cache_size() == max(n0, 1)
+
+    def test_batched_matches_sequential_loop_exactly(self, batched_results):
+        """The batched front for S>=4 mixed INT/FP scenarios is
+        bit-identical to the historical re-jit-per-scenario loop."""
+        for (p, w), res in zip(SMALL_SCENARIOS, batched_results):
+            ref = nsga2.run_static(
+                DesignSpace(prec=get_precision(p), w_store=w), CFG
+            )
+            np.testing.assert_array_equal(res.genes, ref.genes)
+            np.testing.assert_array_equal(res.front_genes, ref.front_genes)
+            np.testing.assert_array_equal(
+                res.front_objectives, ref.front_objectives
+            )
+            np.testing.assert_array_equal(res.ranks, ref.ranks)
+
+    def test_batched_matches_oracle_exactly(self, batched_results):
+        """On these small spaces the elitist archive covers the whole
+        space, so the NSGA-II front must EQUAL the enumerated oracle."""
+        for (p, w), res in zip(SMALL_SCENARIOS, batched_results):
+            oracle = explorer.brute_force_front(
+                DesignSpace(prec=get_precision(p), w_store=w)
+            )
+            got = {tuple(g) for g in res.front_genes}
+            want = {tuple(g) for g in oracle}
+            assert got == want, (p, w, len(got), len(want))
+
+    def test_explore_multi_paths_agree(self):
+        def key(pts):
+            return sorted(
+                (p.precision, p.w_store) + tuple(int(g) for g in p.genes)
+                for p in pts
+            )
+
+        cfg = nsga2.NSGA2Config(pop_size=32, generations=12)
+        b = explorer.explore_multi(SMALL_SCENARIOS[:4], cfg, batched=True)
+        s = explorer.explore_multi(SMALL_SCENARIOS[:4], cfg, batched=False)
+        assert key(b) == key(s)
+        bx = explorer.explore_multi(
+            SMALL_SCENARIOS[:4], cfg, batched=True, cross_dominate=True
+        )
+        sx = explorer.explore_multi(
+            SMALL_SCENARIOS[:4], cfg, batched=False, cross_dominate=True
+        )
+        assert key(bx) == key(sx)
+        assert len(bx) <= len(b)
+
+    def test_explore_multi_records_to_store(self, tmp_path):
+        store = ResultStore(tmp_path)
+        pts = explorer.explore_multi(
+            SMALL_SCENARIOS[:2],
+            nsga2.NSGA2Config(pop_size=32, generations=8),
+            store=store, record_name="dse_smoke",
+        )
+        assert "dse_smoke" in store
+        rec = store.get("dse_smoke")
+        assert rec["n_points"] == len(pts)
+        assert rec["_record"]["kind"] == "dse"
+        assert rec["_record"]["wall_s"] > 0
+        assert len(rec["points"]) == len(pts)
+        assert rec["points"][0]["area_mm2"] > 0
+
+
+class TestIslandsMulti:
+    def test_scenario_island_fronts_sound(self):
+        """run_islands_multi: every returned front point must not be
+        dominated by any oracle-front point of its own scenario."""
+        scens = [("int8", 16384), ("bf16", 8192)]
+        results = explorer.run_islands_multi(
+            scens, nsga2.NSGA2Config(pop_size=64, generations=0),
+            rounds=3, gens_per_round=12, n_migrants=4,
+        )
+        assert len(results) == len(scens)
+        for (p, w), res in zip(scens, results):
+            assert res.front_genes.shape[0] > 5
+            sp = DesignSpace(prec=get_precision(p), w_store=w)
+            oracle = explorer.brute_force_front(sp)
+            oF, _ = evaluate_host(sp.scenario, oracle)
+            for fo in res.front_objectives:
+                assert not any(
+                    bool(np.all(of <= fo) and np.any(of < fo)) for of in oF
+                )
+
+    def test_scenario_count_must_divide_mesh(self):
+        from jax.sharding import Mesh
+
+        dev = np.array(jax.devices())[:1]
+        mesh = Mesh(dev.reshape(1, 1), ("scenario", "island"))
+        # 1-device mesh: any S works (scenario axis size 1 divides all S).
+        out = explorer.run_islands_multi(
+            [("int4", 4096), ("int8", 4096), ("int16", 4096)],
+            nsga2.NSGA2Config(pop_size=32, generations=0),
+            mesh=mesh, rounds=1, gens_per_round=4, n_migrants=2,
+        )
+        assert len(out) == 3
+
+
+class TestResultStore:
+    def test_round_trip_and_envelope(self, tmp_path):
+        store = ResultStore(tmp_path)
+        p = store.put(
+            "cell_a", {"status": "ok", "arr": np.arange(3)},
+            kind="dryrun", wall_s=1.5,
+        )
+        assert p.exists() and not p.with_suffix(".json.tmp").exists()
+        rec = store.get("cell_a")
+        assert rec["status"] == "ok"
+        assert rec["arr"] == [0, 1, 2]
+        assert rec["_record"]["kind"] == "dryrun"
+        assert store.names() == ["cell_a"]
+        assert "cell_a" in store and "cell_b" not in store
+
+    def test_flat_names_enforced(self, tmp_path):
+        store = ResultStore(tmp_path)
+        with pytest.raises(ValueError):
+            store.put("../escape", {})
+
+    def test_to_jsonable_handles_numpy_and_dataclasses(self, tmp_path):
+        from repro.core.explorer import ParetoPoint
+
+        pt = ParetoPoint(
+            precision="int8", w_store=4096, N=64, H=8, L=8, k=4,
+            genes=np.asarray([3, 3, 2], np.int32),
+            area=1.0, delay=2.0, energy=3.0, throughput=4.0,
+            area_mm2=0.1, delay_ns=1.0, energy_nJ=0.2, tops=5.0,
+            tops_per_w=6.0, tops_per_mm2=7.0,
+        )
+        obj = to_jsonable(
+            {"pt": pt, "f32": np.float32(1.5), "i64": np.int64(3),
+             "b": np.bool_(True), "arr": np.ones((2, 2))}
+        )
+        s = json.dumps(obj)  # must not raise
+        assert '"genes": [3, 3, 2]' in s
+        path = dump_json(tmp_path / "x.json", obj)
+        assert json.loads(path.read_text())["i64"] == 3

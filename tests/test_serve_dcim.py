@@ -45,6 +45,21 @@ class TestEngine:
         b = eng.generate(prompts, n_tokens=12, temperature=1.5, seed=2)
         assert not np.array_equal(a.tokens, b.tokens)
 
+    def test_oversize_request_raises_value_error(self, engine):
+        """Oversize requests must raise a real ValueError naming prompt
+        length, n_tokens and max_len — not a bare assert that vanishes
+        under ``python -O``."""
+        cfg, eng = engine
+        prompts = np.random.default_rng(4).integers(
+            0, cfg.vocab_size, (1, 60)).astype(np.int32)
+        with pytest.raises(ValueError) as ei:
+            eng.generate(prompts, n_tokens=8)
+        msg = str(ei.value)
+        assert "60" in msg and "8" in msg and "max_len 64" in msg
+        # Boundary case is allowed: prompt + n_tokens == max_len.
+        out = eng.generate(prompts[:, :4], n_tokens=60)
+        assert out.tokens.shape == (1, 64)
+
     def test_bucketing(self):
         reqs = [[1, 2], [3, 4, 5], [6, 7], [8]]
         buckets = bucket_requests(reqs)
@@ -135,6 +150,14 @@ class TestDcimMap:
         assert p.total_area_mm2 > 0
         assert p.tokens_per_s > 0
         assert p.macs_per_token > 1e9
+
+    def test_plan_multi_precision_batched(self):
+        """Candidate precisions explore as ONE batched scenario table;
+        distillation picks the winner across the merged INT+FP front."""
+        p = plan("qwen2.5-3b", precision=["int8", "bf16"], w_store=65536,
+                 cfg_nsga=nsga2.NSGA2Config(pop_size=32, generations=12))
+        assert p.precision in ("int8", "bf16")
+        assert p.n_macros > 0 and p.tokens_per_s > 0
 
     def test_moe_activation_rate(self):
         wl = extract(configs.get_config("moonshot-v1-16b-a3b"))
