@@ -1,0 +1,231 @@
+"""Continuous-batching vs bucketed-batch serving benchmark.
+
+Serves ONE mixed-length greedy arrival trace (mixed prompt lengths AND
+mixed n_tokens) through both paths:
+
+  * ``bucketed`` — the historical ``Engine`` + ``bucket_requests`` loop:
+    requests group into equal-prompt-length batches and every batch is
+    held until its LONGEST generation finishes (and pays one prefill
+    compile per distinct prompt length),
+  * ``continuous`` — ``serve.Scheduler``: a fixed pool of decode slots,
+    one jitted decode program, prompt-bucketed prefill; slots retire and
+    recycle per request, so throughput is bounded by slot count instead
+    of the slowest bucket member.
+
+Reports useful tokens/s (only the tokens each request asked for count)
+and p50/p99 request completion latency, cold (first trace, compiles
+included) and warm (second trace).  The two paths must produce
+IDENTICAL greedy tokens per request — the token-exactness guard that
+keeps the comparison honest (continuous batching is a scheduling
+change, not a numerics change).
+
+Each path runs in its OWN subprocess so both are measured cold; the
+record lands in ``BENCH_serve.json`` at the repo root via
+``core.results.ResultStore`` (CI regenerates it with ``--smoke``).
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.bench_serve            # full
+  PYTHONPATH=src python -m benchmarks.bench_serve --smoke    # CI-sized
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import pathlib
+import platform
+import subprocess
+import sys
+import time
+
+import numpy as np
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+ARCH = "qwen2.5-3b"
+
+
+def _trace(smoke: bool):
+    """Deterministic mixed-length trace: (prompts, n_tokens per request)."""
+    n_req = 16 if smoke else 32
+    rng = np.random.default_rng(0)
+    from repro import configs
+
+    cfg = configs.get_smoke_config(ARCH)
+    plens = rng.choice([3, 5, 8, 11, 13, 16, 20], size=n_req)
+    ntoks = rng.choice([4, 8, 12, 20, 28] if smoke else [8, 16, 32, 48, 64],
+                       size=n_req)
+    prompts = [rng.integers(0, cfg.vocab_size, p).astype(np.int32)
+               for p in plens]
+    return cfg, prompts, [int(n) for n in ntoks]
+
+
+def _percentiles(lat):
+    lat = np.asarray(sorted(lat))
+    return {
+        "p50_s": round(float(np.percentile(lat, 50)), 4),
+        "p99_s": round(float(np.percentile(lat, 99)), 4),
+    }
+
+
+def _digest(tokens_by_rid):
+    body = json.dumps([[int(t) for t in tokens_by_rid[r]]
+                       for r in sorted(tokens_by_rid)])
+    return hashlib.sha1(body.encode()).hexdigest()
+
+
+def _serve_continuous(cfg, params, prompts, ntoks, max_len, max_slots):
+    from repro.serve import Request, Scheduler
+
+    sched = Scheduler(cfg, params, max_slots=max_slots, max_len=max_len)
+    reqs = [Request(prompt=p, n_tokens=n) for p, n in zip(prompts, ntoks)]
+
+    def run():
+        t0 = time.perf_counter()
+        results = sched.serve(reqs)
+        wall = time.perf_counter() - t0
+        toks = {r.rid: r.generated for r in results}
+        lat = [r.finished_wall_s for r in results]
+        return wall, toks, lat
+
+    cold = run()
+    warm = run()
+    extra = {
+        "decode_steps": sched.last_stats.decode_steps,
+        "prefills": sched.last_stats.prefills,
+        "occupancy": round(sched.last_stats.occupancy, 3),
+        "compiled_programs": sched.compile_counts()["total"],
+    }
+    return cold, warm, extra
+
+
+def _serve_bucketed(cfg, params, prompts, ntoks, max_len):
+    from repro.serve import Engine, bucket_requests
+
+    eng = Engine(cfg, params, max_len=max_len)
+    buckets = bucket_requests([list(p) for p in prompts])
+
+    def run():
+        t0 = time.perf_counter()
+        toks, lat = {}, []
+        for idx, arr in buckets:
+            # The whole bucket runs until its longest request finishes —
+            # that is the pathology continuous batching removes.
+            n_max = max(ntoks[i] for i in idx)
+            out = eng.generate(arr, n_tokens=n_max, request_ids=idx)
+            done = time.perf_counter() - t0
+            for row, i in enumerate(idx):
+                toks[i] = out.tokens[row, out.prompt_len:out.prompt_len + ntoks[i]]
+                lat.append(done)
+        return time.perf_counter() - t0, toks, lat
+
+    cold = run()
+    warm = run()
+    return cold, warm, {"n_buckets": len(buckets)}
+
+
+def run_one(path: str, smoke: bool) -> None:
+    """Child-process entry: run one serving path cold, print JSON."""
+    import jax
+
+    from repro.models import lm
+
+    cfg, prompts, ntoks = _trace(smoke)
+    max_len = 64 if smoke else 128
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    if path == "continuous":
+        cold, warm, extra = _serve_continuous(
+            cfg, params, prompts, ntoks, max_len, max_slots=4
+        )
+    else:
+        cold, warm, extra = _serve_bucketed(cfg, params, prompts, ntoks, max_len)
+
+    useful = sum(ntoks)
+    rec = {"path": path, "useful_tokens": useful, **extra}
+    for tag, (wall, toks, lat) in (("cold", cold), ("warm", warm)):
+        rec[f"{tag}_s"] = round(wall, 3)
+        rec[f"{tag}_tokens_per_s"] = round(useful / max(wall, 1e-9), 2)
+        rec[f"{tag}_latency"] = _percentiles(lat)
+    rec["tokens_key"] = _digest(cold[1])
+    rec["cold_warm_identical"] = _digest(cold[1]) == _digest(warm[1])
+    print(json.dumps(rec))
+
+
+def _spawn(path: str, smoke: bool) -> dict:
+    env = dict(os.environ)
+    src = str(REPO_ROOT / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "benchmarks.bench_serve", "--run-one", path]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(
+        cmd, capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+        timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"{path} run failed:\n{out.stderr[-2000:]}")
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized trace (16 requests, short generations)")
+    ap.add_argument("--out-root", default=str(REPO_ROOT))
+    ap.add_argument("--run-one", choices=["continuous", "bucketed"],
+                    help=argparse.SUPPRESS)  # child-process mode
+    args = ap.parse_args()
+
+    if args.run_one:
+        run_one(args.run_one, args.smoke)
+        return 0
+
+    import jax
+
+    t0 = time.perf_counter()
+    cont = _spawn("continuous", args.smoke)
+    buck = _spawn("bucketed", args.smoke)
+    _, prompts, _ = _trace(args.smoke)
+
+    rec = {
+        "arch": ARCH,
+        "n_requests": len(prompts),
+        "useful_tokens": cont["useful_tokens"],
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "continuous": cont,
+        "bucketed": buck,
+        "warm_speedup": round(
+            cont["warm_tokens_per_s"] / max(buck["warm_tokens_per_s"], 1e-9), 2
+        ),
+        "cold_speedup": round(
+            cont["cold_tokens_per_s"] / max(buck["cold_tokens_per_s"], 1e-9), 2
+        ),
+        "tokens_identical": cont["tokens_key"] == buck["tokens_key"],
+        "smoke": bool(args.smoke),
+    }
+
+    from repro.core.results import ResultStore
+
+    store = ResultStore(args.out_root)
+    path = store.put("BENCH_serve", rec, kind="benchmark",
+                     wall_s=time.perf_counter() - t0)
+    print(
+        f"continuous={cont['warm_tokens_per_s']} tok/s "
+        f"bucketed={buck['warm_tokens_per_s']} tok/s "
+        f"(warm {rec['warm_speedup']}x, cold {rec['cold_speedup']}x) "
+        f"p99 {cont['warm_latency']['p99_s']}s vs "
+        f"{buck['warm_latency']['p99_s']}s "
+        f"tokens_identical={rec['tokens_identical']} -> {path}"
+    )
+    if not rec["tokens_identical"]:
+        print("ERROR: continuous and bucketed paths served different tokens")
+        return 1
+    if rec["warm_speedup"] <= 1.0:
+        print("WARNING: continuous batching did not beat the bucketed path")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

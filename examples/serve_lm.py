@@ -1,5 +1,5 @@
-"""Batched serving example: prefill + decode with KV caches and length
-bucketing.
+"""Serving example: the bucketed Engine vs the continuous-batching
+Scheduler on the same mixed-length request set.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -8,13 +8,12 @@ import numpy as np
 
 from repro import configs
 from repro.models import lm
-from repro.serve import Engine, bucket_requests
+from repro.serve import Engine, Request, Scheduler, bucket_requests
 
 
 def main():
     cfg = configs.get_smoke_config("mistral-nemo-12b")
     params = lm.init(jax.random.PRNGKey(0), cfg)
-    engine = Engine(cfg, params, max_len=96)
 
     rng = np.random.default_rng(0)
     requests = [
@@ -22,11 +21,32 @@ def main():
         for _ in range(6)
     ]
     print(f"{len(requests)} requests, lengths {[len(r) for r in requests]}")
+
+    print("\n-- bucketed Engine: equal-length batches, run to the longest --")
+    engine = Engine(cfg, params, max_len=96)
     for idx, batch in bucket_requests(requests):
-        out = engine.generate(batch, n_tokens=16, temperature=0.8, seed=1)
+        out = engine.generate(batch, n_tokens=16, temperature=0.8, seed=1,
+                              request_ids=idx)
         print(f"  bucket len={out.prompt_len}: served {len(idx)} requests "
               f"-> {out.tokens.shape[1]} tokens each")
-        print(f"    first continuation: {out.tokens[0, out.prompt_len:].tolist()}")
+
+    print("\n-- continuous Scheduler: slot pool, per-request n_tokens --")
+    sched = Scheduler(cfg, params, max_slots=3, max_len=96, seed=1)
+    reqs = [
+        Request(prompt=np.asarray(p, np.int32),
+                n_tokens=int(rng.integers(4, 24)),
+                temperature=0.8,
+                arrival=i // 2)           # staggered arrivals
+        for i, p in enumerate(requests)
+    ]
+    for res in sched.serve(reqs):
+        print(f"  rid={res.rid} prompt={res.prompt_len:2d} "
+              f"gen={res.generated.size:2d} admitted@{res.admitted_step} "
+              f"finished@{res.finished_step}")
+    s = sched.last_stats
+    print(f"  {s.decode_steps} decode steps, {s.prefills} prefills, "
+          f"occupancy {s.occupancy:.0%}, "
+          f"{sched.compile_counts()['total']} compiled programs")
 
 
 if __name__ == "__main__":

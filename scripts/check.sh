@@ -6,6 +6,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m pytest -x -q -m "not slow" "$@"
 PYTHONPATH=src python -m benchmarks.bench_dse --smoke
+PYTHONPATH=src python -m benchmarks.bench_serve --smoke
 PYTHONPATH=src python -m repro.launch.dryrun \
   --arch qwen2.5-3b --shape decode_32k --mesh single \
   --out results/dryrun-ci --force

@@ -134,7 +134,8 @@ def decode_attention(
     q: jnp.ndarray,            # (B, 1, H, hd)
     k_cache: jnp.ndarray,      # (B, S_max, Hk, hd)
     v_cache: jnp.ndarray,      # (B, S_max, Hk, hdv)
-    pos,                       # scalar: current length (q is at index pos)
+    pos,                       # current length (q is at index pos):
+                               # scalar, or (B,) per-row positions
 ) -> jnp.ndarray:
     B, _, H, hd = q.shape
     _, S, Hk, hdv = v_cache.shape
@@ -144,8 +145,12 @@ def decode_attention(
     s = jnp.einsum(
         "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
     )
-    mask = jnp.arange(S) <= pos
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if jnp.ndim(pos) == 1:
+        mask = jnp.arange(S)[None, :] <= pos[:, None]       # (B, S)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    else:
+        mask = jnp.arange(S) <= pos
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum(
         "bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
@@ -205,12 +210,22 @@ def gqa_apply_train(p, x, cfg, position_ids=None):
 
 
 def gqa_apply_decode(p, x, cfg, cache, pos, position_ids=None):
-    """cache: dict(k=(B, S_max, Hk, hd), v=...); x: (B, 1, D)."""
-    q, k, v = gqa_qkv(p, x, cfg, pos, position_ids)
-    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
-    o = decode_attention(q, k_cache, v_cache, pos)
+    """cache: dict(k=(B, S_max, Hk, hd), v=...); x: (B, 1, D).
+    ``pos`` is a scalar (all rows at the same length) or a (B,) vector of
+    per-row lengths (slot-based serving: each slot decodes at its own
+    position)."""
     B = x.shape[0]
+    per_row = jnp.ndim(pos) == 1
+    off = pos[:, None] if per_row else pos
+    q, k, v = gqa_qkv(p, x, cfg, off, position_ids)
+    if per_row:
+        rows = jnp.arange(B)
+        k_cache = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    o = decode_attention(q, k_cache, v_cache, pos)
     y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
     return y, {"k": k_cache, "v": v_cache}
 
@@ -299,18 +314,26 @@ def mla_apply_train(p, x, cfg, position_ids=None):
 
 def mla_apply_decode(p, x, cfg, cache, pos):
     """Absorbed MLA decode: scores/context computed in the compressed
-    c_kv space — the cache stays (B, S, r_kv) + (B, S, d_rope)."""
+    c_kv space — the cache stays (B, S, r_kv) + (B, S, d_rope).  ``pos``
+    is a scalar or a (B,) vector of per-row lengths (slotted serving)."""
     m: MLAConfig = cfg.mla
     B = x.shape[0]
     H = cfg.n_heads
-    q_nope, q_rope = _mla_q(p, x, cfg, pos)           # (B,1,H,dn),(B,1,H,dr)
-    c_new, kr_new = _mla_ckv(p, x, cfg, pos)          # (B,1,rkv),(B,1,dr)
-    ckv = jax.lax.dynamic_update_slice(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
-    )
-    krope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
-    )
+    per_row = jnp.ndim(pos) == 1
+    off = pos[:, None] if per_row else pos
+    q_nope, q_rope = _mla_q(p, x, cfg, off)           # (B,1,H,dn),(B,1,H,dr)
+    c_new, kr_new = _mla_ckv(p, x, cfg, off)          # (B,1,rkv),(B,1,dr)
+    if per_row:
+        rows = jnp.arange(B)
+        ckv = cache["c_kv"].at[rows, pos].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+        krope = cache["k_rope"].at[rows, pos].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
+    else:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, pos, 0)
+        )
+        krope = jax.lax.dynamic_update_slice(
+            cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
+        )
 
     w_kv_b = p["kv_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
     w_uk = w_kv_b[:, :, : m.qk_nope_dim]              # (rkv, H, dn)
@@ -323,8 +346,12 @@ def mla_apply_decode(p, x, cfg, cache, pos):
         + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
     ) * scale                                          # (B,H,1,S)
     S_max = ckv.shape[1]
-    mask = jnp.arange(S_max) <= pos
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if per_row:
+        mask = jnp.arange(S_max)[None, :] <= pos[:, None]   # (B, S)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    else:
+        mask = jnp.arange(S_max) <= pos
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))
     o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))

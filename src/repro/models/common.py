@@ -22,8 +22,27 @@ def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale=None
     return p
 
 
+# Pluggable matmul implementation for every ``dense`` in the model stack.
+# ``repro.sim.functional.dcim_numerics`` installs a DCIM macro simulator
+# here so serving (Engine / Scheduler) executes projections with the
+# generated macro's numerics; ``None`` is the plain float path.  The hook
+# is read at trace time, so jitted programs bake in whichever
+# implementation was active when they were first called.
+_MVM_IMPL = None
+
+
+def set_mvm_impl(fn):
+    """Install ``fn(x, w) -> y`` as the dense matmul; returns the
+    previous implementation (for restore-on-exit context managers)."""
+    global _MVM_IMPL
+    prev = _MVM_IMPL
+    _MVM_IMPL = fn
+    return prev
+
+
 def dense(p, x):
-    y = x @ p["w"].astype(x.dtype)
+    w = p["w"].astype(x.dtype)
+    y = x @ w if _MVM_IMPL is None else _MVM_IMPL(x, w).astype(x.dtype)
     if "b" in p:
         y = y + p["b"].astype(x.dtype)
     return y

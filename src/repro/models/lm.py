@@ -85,7 +85,7 @@ def init(key, cfg: LMConfig) -> Dict[str, Any]:
 
 
 # ------------------------------- blocks ---------------------------------------
-def _block_train(bp, x, cfg: LMConfig, mk: str, fk: str, position_ids, training: bool = True):
+def _block_train(bp, x, cfg: LMConfig, mk: str, fk: str, position_ids, training: bool = True, valid_len=None):
     h = norm_apply(bp["ln1"], x, cfg.norm)
     aux = jnp.float32(0.0)
     if mk == "gqa":
@@ -97,13 +97,13 @@ def _block_train(bp, x, cfg: LMConfig, mk: str, fk: str, position_ids, training:
     else:
         y, cacheable = ssm.mamba_mix(
             bp["mixer"], h, cfg, cfg.mamba_chunk, return_state=True,
-            training=training,
+            training=training, valid_len=valid_len,
         )
     x = x + y
     if fk != "none":
         h2 = norm_apply(bp["ln2"], x, cfg.norm)
         if fk == "moe":
-            y2, aux = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+            y2, aux = moe_mod.moe_apply(bp["ffn"], h2, cfg, training=training)
         else:
             y2 = common.ffn_apply(bp["ffn"], h2, cfg.act)
         x = x + y2
@@ -123,7 +123,7 @@ def _block_decode(bp, x, cfg: LMConfig, mk: str, fk: str, cache, pos, position_i
     if fk != "none":
         h2 = norm_apply(bp["ln2"], x, cfg.norm)
         if fk == "moe":
-            y2, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg)
+            y2, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg, training=False)
         else:
             y2 = common.ffn_apply(bp["ffn"], h2, cfg.act)
         x = x + y2
@@ -150,8 +150,11 @@ def _head_logits(params, h, cfg: LMConfig):
 
 
 # ------------------------------- forward --------------------------------------
-def forward_hidden(params, x, cfg: LMConfig, position_ids=None, collect_cache=False, training=True):
-    """Scan the block stack; returns (h, stacked cacheables, aux_sum)."""
+def forward_hidden(params, x, cfg: LMConfig, position_ids=None, collect_cache=False, training=True, valid_len=None):
+    """Scan the block stack; returns (h, stacked cacheables, aux_sum).
+    ``valid_len`` marks trailing positions as right-padding for cache
+    collection (see ``mamba_mix``); attention needs no mask — causality
+    already keeps right-pads out of every valid position's output."""
     period = cfg.scan_period()
     kinds = [(cfg.mixer_kind(i), cfg.ffn_of(i)) for i in range(period)]
 
@@ -160,7 +163,7 @@ def forward_hidden(params, x, cfg: LMConfig, position_ids=None, collect_cache=Fa
         aux = jnp.float32(0.0)
         for pos in range(period):
             mk, fk = kinds[pos]
-            x, c, a = _block_train(group_params[pos], x, cfg, mk, fk, position_ids, training)
+            x, c, a = _block_train(group_params[pos], x, cfg, mk, fk, position_ids, training, valid_len)
             caches.append(c)
             aux = aux + a
         return x, (tuple(caches), aux)
@@ -242,8 +245,14 @@ def init_cache(cfg: LMConfig, batch: int, max_len: int):
 
 def decode_step(params, inputs, pos, caches, cfg: LMConfig):
     """One decode step: inputs {"tokens": (B,1)} | {"embeds": (B,1,D)};
-    pos = current length (new token written at index pos)."""
-    x = embed_inputs(params, inputs, cfg, offset=pos)
+    pos = current length (new token written at index pos) — a scalar
+    (classic equal-length batch) or a (B,) vector of per-row lengths
+    (slot-based continuous batching: every slot decodes at its own
+    position inside ONE program)."""
+    x = embed_inputs(
+        params, inputs, cfg,
+        offset=pos[:, None] if jnp.ndim(pos) == 1 else pos,
+    )
     period = cfg.scan_period()
     kinds = [(cfg.mixer_kind(i), cfg.ffn_of(i)) for i in range(period)]
     pos_ids = inputs.get("position_ids")
@@ -263,17 +272,34 @@ def decode_step(params, inputs, pos, caches, cfg: LMConfig):
     return logits, new_caches
 
 
-def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None):
+def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None,
+            valid_len=None):
     """Run the full prompt; returns (caches padded to max_len, last-token
-    logits).  SSM mixers carry O(1) state; attention mixers stack K/V."""
+    logits).  SSM mixers carry O(1) state; attention mixers stack K/V.
+
+    ``valid_len`` (traced scalar) supports *bucketed* prefill: the prompt
+    is right-padded to a bucket length, positions >= valid_len are
+    padding, and the returned logits are taken at index valid_len - 1
+    (the last real token).  Right-pads never reach a real position's
+    output (causal attention) or the returned SSM state / conv tail
+    (identity recurrence steps, see ``mamba_mix``); the K/V cache rows in
+    [valid_len, S) hold pad junk, which is safe because decode at
+    position p overwrites row p before the causal mask first exposes it."""
     x = embed_inputs(params, batch, cfg)
     S = x.shape[1]
     B = x.shape[0]
     max_len = max_len or S
     pos_ids = batch.get("position_ids")
-    h, caches, _ = forward_hidden(params, x, cfg, pos_ids, collect_cache=True, training=False)
+    h, caches, _ = forward_hidden(params, x, cfg, pos_ids, collect_cache=True,
+                                  training=False, valid_len=valid_len)
     h = norm_apply(params["ln_f"], h, cfg.norm)
-    logits = _head_logits(params, h[:, -1:], cfg)
+    if valid_len is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jax.lax.dynamic_slice(
+            h, (0, valid_len - 1, 0), (B, 1, h.shape[2])
+        )
+    logits = _head_logits(params, h_last, cfg)
 
     period = cfg.scan_period()
     cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.cache_dtype]
@@ -303,3 +329,19 @@ def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None):
                 {"h": got["h"], "conv": got["conv"].astype(cdt)}
             )
     return tuple(out), logits
+
+
+def insert_cache_slot(pool, row_caches, slot):
+    """Overwrite slot ``slot`` of a pooled cache (batch dim 1, after the
+    stacked-groups dim 0) with a freshly prefilled batch-of-1 cache.
+
+    The WHOLE per-slot region is replaced — K/V rows beyond the new
+    prompt come from ``init_cache`` zeros, so nothing of the slot's
+    previous occupant survives recycling (no cross-request KV leakage).
+    """
+    return jax.tree.map(
+        lambda pool_leaf, new_leaf: pool_leaf.at[:, slot].set(
+            new_leaf[:, 0].astype(pool_leaf.dtype)
+        ),
+        pool, row_caches,
+    )

@@ -98,7 +98,7 @@ def _scan_chunk(h0, dA, dBu):
     return aa * h0[:, None] + bb                          # (B, C, Di, N)
 
 
-def _pallas_scan(p, u, cfg):
+def _pallas_scan(p, u, cfg, valid_len=None):
     """Fused Pallas selective scan (§Perf: one HBM pass instead of the
     associative scan's ~16).  Wrapped in shard_map when a mesh context is
     active: the recurrence is local in (batch, d_inner), sequential in S
@@ -107,6 +107,10 @@ def _pallas_scan(p, u, cfg):
     from repro.kernels.selective_scan import selective_scan_pallas
 
     dt, Bc, Cc, A = _ssm_raw(p, u, cfg)
+    if valid_len is not None:
+        # dt = 0 at padded steps -> dA = exp(0) = 1, dBu = dt*B*u = 0:
+        # the kernel carries the state through pads unchanged.
+        dt = jnp.where((jnp.arange(u.shape[1]) < valid_len)[None, :, None], dt, 0.0)
     D_skip = p["D"]
 
     def run(u_, dt_, b_, c_, a_, d_):
@@ -136,13 +140,20 @@ def _pallas_scan(p, u, cfg):
 
 
 def mamba_mix(p, x, cfg, chunk: int, return_state: bool = False,
-              training: bool = True):
+              training: bool = True, valid_len=None):
     """x: (B, S, D) -> (B, S, D), full-sequence (train/prefill).
     With ``return_state`` also returns the decode cache {"h", "conv"}
     capturing the post-prompt SSM state and conv tail.  When
     ``cfg.ssm_impl == "pallas"`` and not training, the recurrence runs in
     the fused Pallas kernel (no autodiff rule -> training keeps the
-    differentiable associative scan)."""
+    differentiable associative scan).
+
+    ``valid_len`` (traced scalar) marks positions >= valid_len as
+    right-padding: their recurrence step is forced to the identity
+    (dA = 1, dBu = 0, i.e. dt = 0) so the returned state is the state
+    after the *valid* prefix, and the conv tail is taken ending at
+    ``valid_len`` — bucketed prefill pads prompts without perturbing the
+    decode cache.  Outputs at padded positions are unspecified."""
     s: SSMConfig = cfg.ssm
     d_inner, _ = ssm_dims(cfg)
     B, S, _ = x.shape
@@ -160,9 +171,13 @@ def mamba_mix(p, x, cfg, chunk: int, return_state: bool = False,
     u = jax.nn.silu(conv)
 
     if getattr(cfg, "ssm_impl", "assoc") == "pallas" and not training:
-        y, h_last = _pallas_scan(p, u, cfg)
+        y, h_last = _pallas_scan(p, u, cfg, valid_len=valid_len)
     else:
         dA, dBu, Cc = _ssm_coeffs(p, u, cfg)
+        if valid_len is not None:
+            keep = (jnp.arange(S) < valid_len)[None, :, None, None]
+            dA = jnp.where(keep, dA, 1.0)
+            dBu = jnp.where(keep, dBu, 0.0)
 
         chunk = min(chunk, S)
         while S % chunk:
@@ -186,9 +201,19 @@ def mamba_mix(p, x, cfg, chunk: int, return_state: bool = False,
     out = dense(p["out_proj"], y)
     if not return_state:
         return out
-    tail = u_raw[:, S - (s.d_conv - 1):, :] if S >= s.d_conv - 1 else jnp.pad(
-        u_raw, ((0, 0), (s.d_conv - 1 - S, 0), (0, 0))
-    )
+    if valid_len is None:
+        tail = u_raw[:, S - (s.d_conv - 1):, :] if S >= s.d_conv - 1 else jnp.pad(
+            u_raw, ((0, 0), (s.d_conv - 1 - S, 0), (0, 0))
+        )
+    else:
+        # Window of d_conv-1 pre-conv inputs ending at valid_len; the
+        # left zero-pad makes valid_len < d_conv-1 match the short-prompt
+        # branch above bit for bit.
+        upad_l = jnp.pad(u_raw, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        tail = jax.lax.dynamic_slice(
+            upad_l, (0, valid_len, 0),
+            (u_raw.shape[0], s.d_conv - 1, u_raw.shape[2]),
+        )
     return out, {"h": h_last, "conv": tail}
 
 

@@ -60,17 +60,45 @@ def _group(x, group_size):
     return x.reshape(T // tg, tg, D), tg
 
 
-def moe_apply(p, x, cfg):
+def _expert_weights(p):
+    # §Perf iterations I1/I2 (see EXPERIMENTS.md):
+    #  - expert weights re-constrained *inside* the layer-scan body so the
+    #    FSDP all-gather happens per layer (1 layer's experts) instead of
+    #    GSPMD hoisting one whole-stack gather before the loop;
+    #  - dispatched activations keep their token-group dim on the data
+    #    axes ("batch"); replicating it forced a full token all-gather
+    #    per layer in the baseline.
+    return (
+        shard_act(p["w_gate"], ("experts", None, "fsdp")),
+        shard_act(p["w_up"], ("experts", None, "fsdp")),
+        shard_act(p["w_down"], ("experts", "fsdp", None)),
+    )
+
+
+def moe_apply(p, x, cfg, training: bool = True):
     """x: (B, S, D) -> (B, S, D).  Capacity-based token dropping (GShard);
     returns the combined expert outputs (+ shared experts, + aux loss kept
     in metrics by the caller via ``moe_apply.last_aux`` pattern avoided —
-    aux loss is returned explicitly)."""
+    aux loss is returned explicitly).
+
+    Inference (``training=False``) is *drop-free*: every token reaches
+    all of its top-k experts.  Capacity drops are a load-balancing
+    training artifact; at serving time they would make a token's output
+    depend on which other tokens share its dispatch group — i.e. on
+    batch composition and prompt padding — which breaks the
+    continuous-batching contract that scheduling never changes numerics.
+    The inference path therefore routes per token with no capacity axis
+    at all (see below)."""
     m: MoEConfig = cfg.moe
     B, S, D = x.shape
-    xg, tg = _group(x, m.group_size)                   # (G, Tg, D)
+    # Decode (S == 1): every token is its own dispatch group.  Grouping
+    # across the batch dim would couple co-scheduled requests — one
+    # slot's token could evict another's expert-capacity slot — so a
+    # slotted decode step must route each row independently (and match
+    # a batch-of-1 decode bit for bit).
+    xg, tg = _group(x, 1 if S == 1 else m.group_size)  # (G, Tg, D)
     G = xg.shape[0]
     E = m.n_experts
-    C = max(int(math.ceil(tg * m.top_k / E * m.capacity_factor)), 1)
 
     logits = dense(p["router"], xg.astype(jnp.float32))          # (G, Tg, E)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -78,6 +106,40 @@ def moe_apply(p, x, cfg):
     gate_vals = gate_vals / jnp.maximum(
         jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
     )
+
+    # Load-balancing auxiliary loss (Switch/GShard).
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
+    )
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    w_gate, w_up, w_down = _expert_weights(p)
+
+    if not training:
+        # Drop-free inference without the capacity axis: a drop-free
+        # GShard layout would need C = Tg capacity slots, making the
+        # dispatch/combine one-hots (Tg, E, Tg) — quadratic in group
+        # size and pure bookkeeping when nothing can ever drop.  Instead
+        # every expert runs every token (same static GEMM shapes as the
+        # full-capacity layout, E/top_k more work than the routed ideal)
+        # and the top-k gates combine the outputs.  Per-token math only:
+        # independent of batch composition, grouping and prompt padding.
+        gates = jnp.sum(
+            jax.nn.one_hot(idx, E, dtype=jnp.float32) * gate_vals[..., None],
+            axis=2,
+        )                                                        # (G, Tg, E)
+        h = jax.nn.silu(jnp.einsum("gtd,edf->egtf", xg, w_gate.astype(xg.dtype)))
+        h = h * jnp.einsum("gtd,edf->egtf", xg, w_up.astype(xg.dtype))
+        h = shard_act(h, ("experts", "batch", None, "ff"))
+        ye = jnp.einsum("egtf,efd->egtd", h, w_down.astype(xg.dtype))
+        y = jnp.einsum("gte,egtd->gtd", gates.astype(ye.dtype), ye)
+        y = y.reshape(B, S, D)
+        if m.n_shared:
+            y = y + ffn_apply(p["shared"], x, "swiglu")
+        return y, aux
+
+    C = max(int(math.ceil(tg * m.top_k / E * m.capacity_factor)), 1)
 
     # Position-in-expert bookkeeping, slot-ordered (GShard).
     dispatch = jnp.zeros((G, tg, E, C), jnp.bfloat16)
@@ -94,24 +156,6 @@ def moe_apply(p, x, cfg):
         dispatch = dispatch + d_k.astype(jnp.bfloat16)
         combine = combine + d_k * (gate_vals[..., kk] * keep)[..., None, None]
         counts = counts + jnp.sum(onehot, axis=1)
-
-    # Load-balancing auxiliary loss (Switch/GShard).
-    frac_tokens = jnp.mean(
-        jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1)
-    )
-    frac_probs = jnp.mean(probs, axis=(0, 1))
-    aux = E * jnp.sum(frac_tokens * frac_probs)
-
-    # §Perf iterations I1/I2 (see EXPERIMENTS.md):
-    #  - expert weights re-constrained *inside* the layer-scan body so the
-    #    FSDP all-gather happens per layer (1 layer's experts) instead of
-    #    GSPMD hoisting one whole-stack gather before the loop;
-    #  - dispatched activations keep their token-group dim on the data
-    #    axes ("batch"); replicating it forced a full token all-gather
-    #    per layer in the baseline.
-    w_gate = shard_act(p["w_gate"], ("experts", None, "fsdp"))
-    w_up = shard_act(p["w_up"], ("experts", None, "fsdp"))
-    w_down = shard_act(p["w_down"], ("experts", "fsdp", None))
 
     xe = jnp.einsum("gtec,gtd->egcd", dispatch.astype(xg.dtype), xg)
     xe = shard_act(xe, ("experts", "batch", None, None))

@@ -1,1 +1,16 @@
-from .engine import Engine, GenerationResult, bucket_requests  # noqa: F401
+from .engine import (  # noqa: F401
+    Engine,
+    GenerationResult,
+    bucket_requests,
+    check_capacity,
+    derive_request_keys,
+    sample_tokens,
+)
+from .scheduler import (  # noqa: F401
+    Request,
+    RequestResult,
+    Scheduler,
+    ServeStats,
+    SlotAllocator,
+    default_prefill_buckets,
+)

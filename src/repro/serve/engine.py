@@ -1,13 +1,19 @@
 """Batched serving engine: prefill + decode with KV/SSM caches.
 
 Requests are grouped into equal-prompt-length batches (length bucketing);
-generation is greedy or temperature sampling.  DCIM-numerics execution of
-linear layers (the bridge to the paper's compiler) lives in
-``repro.sim.functional`` and is validated against this engine's float
-path in tests/test_dcim_sim.py.
+generation is greedy or temperature sampling.  Sampling is *per request*:
+PRNG keys derive from ``(seed, request_id)`` (``derive_request_keys``) so
+a request's sampled continuation is reproducible no matter which batch,
+slot or arrival order served it — the property the continuous-batching
+scheduler (``repro.serve.scheduler``) is verified against.
+
+DCIM-numerics execution of linear layers (the bridge to the paper's
+compiler) lives in ``repro.sim.functional``; pass ``dcim_sim=`` to route
+every projection through a generated macro's numerics.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 from typing import List, Optional
@@ -20,6 +26,67 @@ from repro.models import lm
 from repro.models.config import LMConfig
 
 
+def numerics_ctx(dcim_sim):
+    """Context installing ``dcim_sim`` as the dense-matmul implementation
+    for programs traced inside it (no-op when ``dcim_sim`` is None).
+    Shared by Engine and Scheduler so the two serving paths can never
+    diverge in how the DCIM hook is applied."""
+    if dcim_sim is None:
+        return contextlib.nullcontext()
+    from repro.sim.functional import dcim_numerics
+
+    return dcim_numerics(dcim_sim)
+
+
+def check_capacity(prompt_len: int, n_tokens: int, max_len: int) -> None:
+    """Admission control shared by Engine and Scheduler: a real error,
+    not an assert — oversize requests must be rejected in optimized
+    (-O) deployments too."""
+    if prompt_len + n_tokens > max_len:
+        raise ValueError(
+            f"request exceeds engine capacity: prompt length {prompt_len} + "
+            f"n_tokens {n_tokens} = {prompt_len + n_tokens} > max_len "
+            f"{max_len}; shorten the prompt, request fewer "
+            f"tokens, or build the Engine with a larger max_len"
+        )
+
+
+def derive_request_keys(seed: int, request_ids) -> jnp.ndarray:
+    """Per-request PRNG base keys: ``fold_in(PRNGKey(seed), rid)``.
+
+    Keys depend only on (seed, request id) — never on batch composition,
+    slot assignment or arrival order — so sampled generations reproduce
+    across serving paths.  Returns a (B, 2) uint32 key batch."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(
+        jnp.asarray(request_ids, jnp.int32)
+    )
+
+
+def sample_tokens(logits, keys, steps, temperature):
+    """Sample one token per row: logits (B, V); keys (B, 2) per-request
+    base keys; steps (B,) number of tokens already sampled for that
+    request (the per-step fold); temperature scalar or (B,).
+
+    temperature <= 0 rows take the argmax (greedy); positive rows sample
+    categorically at ``fold_in(key, step)``.  Both branches are computed
+    and selected with ``where`` so temperature stays *traced* — mixed
+    greedy/sampled slot pools run in one compiled program."""
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t = jnp.broadcast_to(
+        jnp.asarray(temperature, jnp.float32), greedy.shape
+    )
+
+    def one(key, step, row, tt):
+        k = jax.random.fold_in(key, step)
+        return jax.random.categorical(
+            k, row.astype(jnp.float32) / jnp.maximum(tt, 1e-6)
+        ).astype(jnp.int32)
+
+    sampled = jax.vmap(one)(keys, jnp.asarray(steps, jnp.int32), logits, t)
+    return jnp.where(t > 0.0, sampled, greedy)
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray           # (B, prompt + generated)
@@ -28,10 +95,12 @@ class GenerationResult:
 
 
 class Engine:
-    def __init__(self, cfg: LMConfig, params, max_len: int = 512):
+    def __init__(self, cfg: LMConfig, params, max_len: int = 512,
+                 dcim_sim=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        self.dcim_sim = dcim_sim
         self._decode = jax.jit(
             partial(lm.decode_step, cfg=cfg), static_argnames=()
         )
@@ -39,42 +108,44 @@ class Engine:
             lambda p, b: lm.prefill(p, b, cfg, max_len=max_len)
         )
 
+    def _numerics(self):
+        return numerics_ctx(self.dcim_sim)
+
     def generate(
         self,
         prompts: np.ndarray,            # (B, P) int32, equal lengths
         n_tokens: int = 32,
         temperature: float = 0.0,
         seed: int = 0,
+        request_ids=None,               # (B,) ids for PRNG derivation
     ) -> GenerationResult:
         B, P = prompts.shape
-        if P + n_tokens > self.max_len:
-            # A real error, not an assert: oversize requests must be
-            # rejected in optimized (-O) deployments too.
-            raise ValueError(
-                f"request exceeds engine capacity: prompt length {P} + "
-                f"n_tokens {n_tokens} = {P + n_tokens} > max_len "
-                f"{self.max_len}; shorten the prompt, request fewer "
-                f"tokens, or build the Engine with a larger max_len"
+        check_capacity(P, n_tokens, self.max_len)
+        rids = np.arange(B) if request_ids is None else np.asarray(request_ids)
+        keys = derive_request_keys(seed, rids)
+        with self._numerics():
+            caches, logits = self._prefill(
+                self.params, {"tokens": jnp.asarray(prompts)}
             )
-        caches, logits = self._prefill(self.params, {"tokens": jnp.asarray(prompts)})
-        key = jax.random.PRNGKey(seed)
-        out = [jnp.asarray(prompts)]
-        cur = self._sample(logits[:, -1], key, temperature)
-        for t in range(n_tokens):
-            out.append(cur[:, None])
-            logits, caches = self._decode(
-                self.params, {"tokens": cur[:, None]}, P + t, caches
+            out = [jnp.asarray(prompts)]
+            cur = sample_tokens(
+                logits[:, -1], keys, np.zeros(B, np.int32), temperature
             )
-            key, sub = jax.random.split(key)
-            cur = self._sample(logits[:, -1], sub, temperature)
+            if n_tokens > 0:
+                out.append(cur[:, None])
+            # Token t is sampled from the decode at position P + t - 1;
+            # the last requested token needs no further decode.
+            for t in range(n_tokens - 1):
+                logits, caches = self._decode(
+                    self.params, {"tokens": cur[:, None]}, P + t, caches
+                )
+                cur = sample_tokens(
+                    logits[:, -1], keys, np.full(B, t + 1, np.int32),
+                    temperature,
+                )
+                out.append(cur[:, None])
         tokens = np.asarray(jnp.concatenate(out, axis=1))
         return GenerationResult(tokens=tokens, prompt_len=P, steps=n_tokens)
-
-    @staticmethod
-    def _sample(logits, key, temperature):
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
 
 
 def bucket_requests(prompt_lists: List[List[int]]):

@@ -1,0 +1,379 @@
+"""Continuous-batching serving: slot-based KV cache pool + scheduler.
+
+The bucketed ``Engine`` holds every request of an equal-length batch
+until the WHOLE batch finishes — one long generation stalls the bucket
+and throughput collapses under mixed-length traffic.  The ``Scheduler``
+instead owns a fixed pool of ``max_slots`` decode slots, each with its
+own KV/SSM cache region and per-slot position, and runs ONE jitted
+decode program per step over all slots:
+
+  * admission — queued requests join as slots free up (admission control
+    against ``max_len`` reuses the Engine's ValueError contract),
+  * prefill — a joining request prefills alone, right-padded to a
+    prompt-length *bucket* (``pad_to_bucket`` idiom: a handful of
+    compiled prefill shapes serve every prompt length), and its cache is
+    written over the slot's region (fully — nothing of the previous
+    occupant survives),
+  * decode — all slots step together with a per-slot position vector and
+    an active-slot mask; requests join and retire without a single
+    re-trace (the decode program compiles exactly once),
+  * retirement — a slot frees on EOS or after ``n_tokens`` and is handed
+    to the next queued request before the next decode step.
+
+Throughput is bounded by slot count, not by the slowest request in a
+bucket.  For greedy decoding the served tokens are *token-exact* against
+``Engine.generate`` run per request (tests/test_serve_scheduler.py):
+continuous batching is a scheduling change, not a numerics change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import LMConfig
+
+from .engine import (
+    check_capacity,
+    derive_request_keys,
+    numerics_ctx,
+    sample_tokens,
+)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request for the continuous-batching scheduler."""
+    prompt: np.ndarray                 # (P,) int32 token ids
+    n_tokens: int = 32
+    temperature: float = 0.0
+    rid: Optional[int] = None          # defaults to submission index
+    arrival: int = 0                   # earliest scheduler step it may join
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: np.ndarray                 # (P + generated,) prompt included
+    prompt_len: int
+    arrival: int
+    admitted_step: int
+    finished_step: int
+    finished_wall_s: float             # seconds since serve() started
+
+    @property
+    def generated(self) -> np.ndarray:
+        return self.tokens[self.prompt_len:]
+
+
+@dataclasses.dataclass
+class ServeStats:
+    steps: int                         # scheduler ticks, idle ones included
+    decode_steps: int
+    prefills: int
+    max_slots: int
+    generated_tokens: int
+    wall_s: float
+    occupancy: float                   # mean fraction of slots active per decode step
+
+
+class SlotAllocator:
+    """Fixed pool of decode slot ids with LIFO reuse.
+
+    LIFO keeps a just-retired slot's cache region hot: it is overwritten
+    by the very next admission instead of cycling through the pool."""
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError(f"need at least one slot, got {n_slots}")
+        self.n_slots = n_slots
+        self._free: List[int] = list(reversed(range(n_slots)))
+        self._busy: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def busy(self) -> frozenset:
+        return frozenset(self._busy)
+
+    def acquire(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slot")
+        slot = self._free.pop()
+        self._busy.add(slot)
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._busy:
+            raise ValueError(f"slot {slot} is not in use")
+        self._busy.discard(slot)
+        self._free.append(slot)
+
+
+def default_prefill_buckets(max_len: int) -> List[int]:
+    """Powers of two up to max_len (max_len always included): a bounded
+    set of compiled prefill shapes serves every admissible prompt."""
+    buckets = []
+    b = 2
+    while b < max_len:
+        buckets.append(b)
+        b *= 2
+    buckets.append(max_len)
+    return buckets
+
+
+def _prefill_fn(params, pool, tokens, valid_len, slot, key, temp, *,
+                cfg: LMConfig, max_len: int):
+    """Jitted once per prompt bucket: prefill one request (right-padded
+    to the bucket), overwrite slot ``slot`` of the pool with its cache,
+    sample its first token at per-request step 0."""
+    caches, logits = lm.prefill(
+        params, {"tokens": tokens}, cfg, max_len=max_len, valid_len=valid_len
+    )
+    pool = lm.insert_cache_slot(pool, caches, slot)
+    tok0 = sample_tokens(
+        logits[:, -1], key[None], jnp.zeros((1,), jnp.int32), temp
+    )[0]
+    return pool, tok0
+
+
+def _decode_fn(params, pool, cur, pos, active, keys, steps, temps, *,
+               cfg: LMConfig):
+    """Jitted exactly once: one decode step over ALL slots.  ``pos`` is
+    the per-slot length vector; inactive slots are clamped to position 0
+    so their (discarded) writes stay in bounds, and their sampled token
+    is masked to -1 so host code can never mistake it for output."""
+    pos_eff = jnp.where(active, pos, 0)
+    logits, pool = lm.decode_step(
+        params, {"tokens": cur[:, None]}, pos_eff, pool, cfg
+    )
+    nxt = sample_tokens(logits[:, -1], keys, steps, temps)
+    return pool, jnp.where(active, nxt, -1)
+
+
+class Scheduler:
+    """Continuous-batching engine over a slot-based KV cache pool.
+
+    Compiled-program budget across ANY trace: one decode program plus
+    one prefill program per distinct prompt bucket actually used
+    (``compile_counts`` exposes the jit cache sizes so tests assert this
+    instead of eyeballing)."""
+
+    def __init__(
+        self,
+        cfg: LMConfig,
+        params,
+        max_slots: int = 4,
+        max_len: int = 512,
+        prefill_buckets: Optional[Sequence[int]] = None,
+        eos_id: Optional[int] = None,
+        seed: int = 0,
+        dcim_sim=None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = int(max_slots)
+        self.max_len = int(max_len)
+        self.eos_id = eos_id
+        self.seed = seed
+        self.dcim_sim = dcim_sim
+        if prefill_buckets is None:
+            prefill_buckets = default_prefill_buckets(self.max_len)
+        buckets = sorted(set(int(b) for b in prefill_buckets))
+        if not buckets or buckets[0] < 1 or buckets[-1] > self.max_len:
+            raise ValueError(f"bad prefill buckets {buckets} for max_len {self.max_len}")
+        if buckets[-1] != self.max_len:
+            buckets.append(self.max_len)   # every admissible prompt fits somewhere
+        self.prefill_buckets = buckets
+        if max_slots < 1:
+            raise ValueError(f"need at least one slot, got {max_slots}")
+
+        # The cache pool is donated: serve() always rebinds it to the
+        # returned value, and aliasing lets XLA update the biggest
+        # buffer of the hot loop in place instead of copying it per step.
+        self._decode = jax.jit(partial(_decode_fn, cfg=cfg), donate_argnums=(1,))
+        self._prefills: Dict[int, "jax.stages.Wrapped"] = {}
+        self.last_stats: Optional[ServeStats] = None
+
+    # ----------------------------- plumbing ---------------------------------
+    def _numerics(self):
+        return numerics_ctx(self.dcim_sim)
+
+    def _bucket_for(self, prompt_len: int) -> int:
+        for b in self.prefill_buckets:
+            if b >= prompt_len:
+                return b
+        raise ValueError(        # unreachable: buckets end at max_len
+            f"prompt length {prompt_len} exceeds every bucket"
+        )
+
+    def _prefill_jit(self, bucket: int):
+        fn = self._prefills.get(bucket)
+        if fn is None:
+            fn = jax.jit(
+                partial(_prefill_fn, cfg=self.cfg, max_len=self.max_len),
+                donate_argnums=(1,),    # pool rebinding, as in _decode
+            )
+            self._prefills[bucket] = fn
+        return fn
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Jit-cache sizes: the scheduler's whole compiled-program budget."""
+        counts = {
+            "decode": int(self._decode._cache_size()),
+            "prefill": {b: int(f._cache_size()) for b, f in self._prefills.items()},
+        }
+        counts["total"] = counts["decode"] + sum(counts["prefill"].values())
+        return counts
+
+    # ----------------------------- serving ----------------------------------
+    def serve(
+        self,
+        requests: Sequence[Union[Request, np.ndarray, list]],
+        seed: Optional[int] = None,
+    ) -> List[RequestResult]:
+        """Serve an arrival trace to completion; results come back in
+        submission order.  ``ServeStats`` lands on ``self.last_stats``."""
+        seed = self.seed if seed is None else seed
+        reqs: List[Request] = []
+        for i, r in enumerate(requests):
+            if not isinstance(r, Request):
+                r = Request(prompt=r)
+            if r.rid is None:
+                r = dataclasses.replace(r, rid=i)
+            if r.n_tokens < 1:
+                raise ValueError(f"request {r.rid}: n_tokens must be >= 1")
+            if r.prompt.size < 1:
+                raise ValueError(f"request {r.rid}: empty prompt")
+            check_capacity(r.prompt.size, r.n_tokens, self.max_len)
+            reqs.append(r)
+        rids = [r.rid for r in reqs]
+        if len(set(rids)) != len(rids):
+            # results are keyed (and PRNG streams derived) by rid — a
+            # collision would silently drop one request's output and
+            # give both the same sampling stream.
+            dup = sorted({r for r in rids if rids.count(r) > 1})
+            raise ValueError(f"duplicate request ids {dup}")
+
+        t0 = time.perf_counter()
+        S = self.max_slots
+        # Arrival order; stable for equal arrival steps.
+        queue = deque(sorted(reqs, key=lambda r: r.arrival))
+        alloc = SlotAllocator(S)
+        pool = lm.init_cache(self.cfg, S, self.max_len)
+
+        pos = np.zeros(S, np.int32)
+        active = np.zeros(S, bool)
+        cur = np.zeros(S, np.int32)
+        keys = np.zeros((S, 2), np.uint32)
+        steps = np.zeros(S, np.int32)          # tokens sampled per occupant
+        temps = np.zeros(S, np.float32)
+        occupant: List[Optional[dict]] = [None] * S
+
+        results: Dict[int, RequestResult] = {}
+        step = 0
+        decode_steps = 0
+        prefills = 0
+        active_slot_steps = 0
+
+        def finish(slot: int) -> None:
+            st = occupant[slot]
+            results[st["req"].rid] = RequestResult(
+                rid=st["req"].rid,
+                tokens=np.concatenate(
+                    [st["req"].prompt, np.asarray(st["out"], np.int32)]
+                ),
+                prompt_len=st["req"].prompt.size,
+                arrival=st["req"].arrival,
+                admitted_step=st["admitted"],
+                finished_step=step,
+                finished_wall_s=time.perf_counter() - t0,
+            )
+            occupant[slot] = None
+            active[slot] = False
+            alloc.release(slot)
+
+        def admit(req: Request) -> None:
+            nonlocal pool, prefills
+            slot = alloc.acquire()
+            P = req.prompt.size
+            bucket = self._bucket_for(P)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :P] = req.prompt
+            key_r = derive_request_keys(seed, [req.rid])[0]
+            pool, tok0 = self._prefill_jit(bucket)(
+                self.params, pool, jnp.asarray(padded),
+                np.int32(P), np.int32(slot), key_r,
+                np.float32(req.temperature),
+            )
+            prefills += 1
+            tok0 = int(tok0)
+            occupant[slot] = {
+                "req": req, "out": [tok0], "remaining": req.n_tokens - 1,
+                "admitted": step,
+            }
+            pos[slot] = P
+            active[slot] = True
+            cur[slot] = tok0
+            keys[slot] = np.asarray(key_r)
+            steps[slot] = 1
+            temps[slot] = req.temperature
+            if occupant[slot]["remaining"] == 0 or tok0 == self.eos_id:
+                finish(slot)
+
+        with self._numerics():
+            while queue or active.any():
+                while queue and queue[0].arrival <= step and alloc.free_count:
+                    admit(queue.popleft())
+                if not active.any():
+                    # Nothing running: jump straight to the next arrival
+                    # (queue is non-empty here, else the loop would have
+                    # ended) instead of ticking through the gap.
+                    step = max(step + 1, queue[0].arrival)
+                    continue
+                pool, nxt = self._decode(
+                    self.params, pool, jnp.asarray(cur), jnp.asarray(pos),
+                    jnp.asarray(active), jnp.asarray(keys),
+                    jnp.asarray(steps), jnp.asarray(temps),
+                )
+                nxt = np.asarray(nxt)
+                decode_steps += 1
+                active_slot_steps += int(active.sum())
+                step += 1
+                pos[active] += 1
+                steps[active] += 1
+                for slot in np.flatnonzero(active):
+                    tok = int(nxt[slot])
+                    st = occupant[slot]
+                    st["out"].append(tok)
+                    st["remaining"] -= 1
+                    cur[slot] = tok
+                    if st["remaining"] == 0 or tok == self.eos_id:
+                        finish(slot)
+
+        self.last_stats = ServeStats(
+            steps=step,
+            decode_steps=decode_steps,
+            prefills=prefills,
+            max_slots=S,
+            generated_tokens=sum(
+                r.tokens.size - r.prompt_len for r in results.values()
+            ),
+            wall_s=time.perf_counter() - t0,
+            occupancy=(
+                active_slot_steps / (decode_steps * S) if decode_steps else 0.0
+            ),
+        )
+        return [results[r.rid] for r in reqs]

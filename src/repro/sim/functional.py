@@ -14,6 +14,7 @@ the cost model.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from typing import Tuple
@@ -77,6 +78,15 @@ class DCIMMacroSim:
     def __call__(self, x, w):
         return self.mvm_fp(x, w) if self.precision.is_fp else self.mvm(x, w)
 
+    def matmul(self, x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+        """Rank-polymorphic ``x @ w`` through the macro's numerics:
+        x (..., K) @ w (K, N) -> (..., N).  This is the shape contract of
+        ``models.common.dense``, so the sim can stand in for every model
+        projection (see :func:`dcim_numerics`)."""
+        K = x.shape[-1]
+        y = self(x.reshape(-1, K).astype(jnp.float32), w.astype(jnp.float32))
+        return y.reshape(x.shape[:-1] + (w.shape[-1],))
+
     # --- cost accounting ------------------------------------------------------
     def account(self, M: int, K: int, N_out: int) -> dict:
         """Latency/energy for an (M, K) x (K, N_out) MVM stream on this
@@ -105,3 +115,23 @@ class DCIMMacroSim:
             "tops_effective": (2.0 * M * K * N_out) / max(lat_ns, 1e-9) * 1e-3,
             "weight_loads": loads_n * passes_k,
         }
+
+
+@contextlib.contextmanager
+def dcim_numerics(sim: DCIMMacroSim):
+    """Route every ``models.common.dense`` matmul through ``sim``.
+
+    Any model program *traced* inside this context — Engine prefill /
+    decode, the Scheduler's slotted decode — executes its projections
+    with the generated macro's numerics (bit-serial integer or
+    pre-aligned block-FP) instead of the float path.  The hook is read at
+    trace time, so keep the context active around the serving calls; the
+    jitted programs then retain the DCIM path for their lifetime.
+    """
+    from repro.models import common as _common
+
+    prev = _common.set_mvm_impl(sim.matmul)
+    try:
+        yield sim
+    finally:
+        _common.set_mvm_impl(prev)
