@@ -1,4 +1,5 @@
-"""Continuous-batching vs bucketed-batch serving benchmark.
+"""Continuous-batching vs bucketed-batch serving benchmark, plus the
+shared-prefix paging trace.
 
 Serves ONE mixed-length greedy arrival trace (mixed prompt lengths AND
 mixed n_tokens) through both paths:
@@ -7,19 +8,26 @@ mixed n_tokens) through both paths:
     requests group into equal-prompt-length batches and every batch is
     held until its LONGEST generation finishes (and pays one prefill
     compile per distinct prompt length),
-  * ``continuous`` — ``serve.Scheduler``: a fixed pool of decode slots,
-    one jitted decode program, prompt-bucketed prefill; slots retire and
-    recycle per request, so throughput is bounded by slot count instead
-    of the slowest bucket member.
+  * ``continuous`` — ``serve.Scheduler``: a fixed pool of decode slots
+    over the paged KV cache, one jitted decode program, bucketed burst
+    prefill; slots retire and recycle per request, so throughput is
+    bounded by slot count instead of the slowest bucket member.
+
+A third child, ``prefix``, serves a SHARED-PREFIX trace (many requests
+over one long system prompt — the serve-trace shape DCIM evaluation
+harnesses produce) twice: through the paged scheduler with prefix reuse
++ burst prefill, and through the PR-3 monolithic scheduler
+(``paged=False``) that must prefill every prompt in full.  Prefix reuse
+turns the repeated prefix prefill into page refcounting, so useful
+tokens/s rises with the shared fraction; tokens must stay identical.
 
 Reports useful tokens/s (only the tokens each request asked for count)
 and p50/p99 request completion latency, cold (first trace, compiles
-included) and warm (second trace).  The two paths must produce
-IDENTICAL greedy tokens per request — the token-exactness guard that
-keeps the comparison honest (continuous batching is a scheduling
-change, not a numerics change).
+included) and warm (second trace).  Paths must produce IDENTICAL greedy
+tokens per request — the token-exactness guard that keeps the
+comparison honest (scheduling and caching are never numerics changes).
 
-Each path runs in its OWN subprocess so both are measured cold; the
+Each path runs in its OWN subprocess so all are measured cold; the
 record lands in ``BENCH_serve.json`` at the repo root via
 ``core.results.ResultStore`` (CI regenerates it with ``--smoke``).
 
@@ -61,6 +69,33 @@ def _trace(smoke: bool):
     return cfg, prompts, [int(n) for n in ntoks]
 
 
+def _prefix_trace(smoke: bool):
+    """Shared-prefix trace: every request = one long common system
+    prefix + a short unique tail.  Uses a lossless cache dtype so prefix
+    reuse is active (the reuse gate requires token-exactness)."""
+    import dataclasses
+
+    from repro import configs
+
+    n_req = 16 if smoke else 32
+    prefix_len = 80 if smoke else 160
+    rng = np.random.default_rng(7)
+    cfg = dataclasses.replace(
+        configs.get_smoke_config(ARCH), cache_dtype="float32"
+    )
+    prefix = rng.integers(0, cfg.vocab_size, prefix_len).astype(np.int32)
+    tails = rng.choice([2, 3, 5, 8], size=n_req)
+    prompts = [
+        np.concatenate(
+            [prefix, rng.integers(0, cfg.vocab_size, t).astype(np.int32)]
+        )
+        for t in tails
+    ]
+    ntoks = [int(n) for n in rng.choice([2, 3, 4], size=n_req)]
+    max_len = 128 if smoke else 256
+    return cfg, prompts, ntoks, max_len, prefix_len
+
+
 def _percentiles(lat):
     lat = np.asarray(sorted(lat))
     return {
@@ -100,6 +135,45 @@ def _serve_continuous(cfg, params, prompts, ntoks, max_len, max_slots):
     return cold, warm, extra
 
 
+def _serve_prefix(cfg, params, prompts, ntoks, max_len):
+    """Shared-prefix trace through prefix-reuse paging vs the PR-3
+    monolithic scheduler; both continuous, same slots, same trace."""
+    from repro.serve import Request, Scheduler
+
+    reqs = [Request(prompt=p, n_tokens=n) for p, n in zip(prompts, ntoks)]
+    out = {}
+    for tag, opts in (
+        ("reuse", dict(paged=True, prefix_reuse=True, burst_prefill=True,
+                       page_size=8)),
+        ("monolithic", dict(paged=False)),
+    ):
+        sched = Scheduler(cfg, params, max_slots=4, max_len=max_len, **opts)
+
+        def run():
+            t0 = time.perf_counter()
+            results = sched.serve(reqs)
+            wall = time.perf_counter() - t0
+            toks = {r.rid: r.generated for r in results}
+            lat = [r.finished_wall_s for r in results]
+            return wall, toks, lat
+
+        cold, warm = run(), run()
+        stats = sched.last_stats
+        out[tag] = {
+            "cold": cold, "warm": warm,
+            "extra": {
+                "prefills": stats.prefills,
+                "prefill_batches": stats.prefill_batches,
+                "prefix_reuse_active": stats.prefix_reuse_active,
+                "prefix_hit_tokens": (
+                    stats.paging["prefix_hit_tokens"] if stats.paging else 0
+                ),
+                "compiled_programs": sched.compile_counts()["total"],
+            },
+        }
+    return out
+
+
 def _serve_bucketed(cfg, params, prompts, ntoks, max_len):
     from repro.serve import Engine, bucket_requests
 
@@ -125,11 +199,46 @@ def _serve_bucketed(cfg, params, prompts, ntoks, max_len):
     return cold, warm, {"n_buckets": len(buckets)}
 
 
+def _path_record(path, useful, cold, warm, extra):
+    rec = {"path": path, "useful_tokens": useful, **extra}
+    for tag, (wall, toks, lat) in (("cold", cold), ("warm", warm)):
+        rec[f"{tag}_s"] = round(wall, 3)
+        rec[f"{tag}_tokens_per_s"] = round(useful / max(wall, 1e-9), 2)
+        rec[f"{tag}_latency"] = _percentiles(lat)
+    rec["tokens_key"] = _digest(cold[1])
+    rec["cold_warm_identical"] = _digest(cold[1]) == _digest(warm[1])
+    return rec
+
+
 def run_one(path: str, smoke: bool) -> None:
     """Child-process entry: run one serving path cold, print JSON."""
     import jax
 
     from repro.models import lm
+
+    if path == "prefix":
+        cfg, prompts, ntoks, max_len, prefix_len = _prefix_trace(smoke)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        both = _serve_prefix(cfg, params, prompts, ntoks, max_len)
+        useful = sum(ntoks)
+        rec = {
+            "path": "prefix",
+            "n_requests": len(prompts),
+            "shared_prefix_tokens": int(prefix_len),
+            "prompt_tokens": int(sum(p.size for p in prompts)),
+        }
+        for tag, r in both.items():
+            rec[tag] = _path_record(tag, useful, r["cold"], r["warm"], r["extra"])
+        rec["tokens_identical"] = (
+            rec["reuse"]["tokens_key"] == rec["monolithic"]["tokens_key"]
+        )
+        for t in ("warm", "cold"):
+            rec[f"{t}_speedup"] = round(
+                rec["reuse"][f"{t}_tokens_per_s"]
+                / max(rec["monolithic"][f"{t}_tokens_per_s"], 1e-9), 2
+            )
+        print(json.dumps(rec))
+        return
 
     cfg, prompts, ntoks = _trace(smoke)
     max_len = 64 if smoke else 128
@@ -140,16 +249,7 @@ def run_one(path: str, smoke: bool) -> None:
         )
     else:
         cold, warm, extra = _serve_bucketed(cfg, params, prompts, ntoks, max_len)
-
-    useful = sum(ntoks)
-    rec = {"path": path, "useful_tokens": useful, **extra}
-    for tag, (wall, toks, lat) in (("cold", cold), ("warm", warm)):
-        rec[f"{tag}_s"] = round(wall, 3)
-        rec[f"{tag}_tokens_per_s"] = round(useful / max(wall, 1e-9), 2)
-        rec[f"{tag}_latency"] = _percentiles(lat)
-    rec["tokens_key"] = _digest(cold[1])
-    rec["cold_warm_identical"] = _digest(cold[1]) == _digest(warm[1])
-    print(json.dumps(rec))
+    print(json.dumps(_path_record(path, sum(ntoks), cold, warm, extra)))
 
 
 def _spawn(path: str, smoke: bool) -> dict:
@@ -173,7 +273,7 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized trace (16 requests, short generations)")
     ap.add_argument("--out-root", default=str(REPO_ROOT))
-    ap.add_argument("--run-one", choices=["continuous", "bucketed"],
+    ap.add_argument("--run-one", choices=["continuous", "bucketed", "prefix"],
                     help=argparse.SUPPRESS)  # child-process mode
     args = ap.parse_args()
 
@@ -186,6 +286,7 @@ def main() -> int:
     t0 = time.perf_counter()
     cont = _spawn("continuous", args.smoke)
     buck = _spawn("bucketed", args.smoke)
+    pref = _spawn("prefix", args.smoke)
     _, prompts, _ = _trace(args.smoke)
 
     rec = {
@@ -196,6 +297,7 @@ def main() -> int:
         "platform": platform.platform(),
         "continuous": cont,
         "bucketed": buck,
+        "prefix_trace": pref,
         "warm_speedup": round(
             cont["warm_tokens_per_s"] / max(buck["warm_tokens_per_s"], 1e-9), 2
         ),
@@ -219,11 +321,23 @@ def main() -> int:
         f"{buck['warm_latency']['p99_s']}s "
         f"tokens_identical={rec['tokens_identical']} -> {path}"
     )
+    print(
+        f"prefix trace: reuse={pref['reuse']['warm_tokens_per_s']} tok/s "
+        f"monolithic={pref['monolithic']['warm_tokens_per_s']} tok/s "
+        f"(warm {pref['warm_speedup']}x) "
+        f"hit_tokens={pref['reuse']['prefix_hit_tokens']} "
+        f"tokens_identical={pref['tokens_identical']}"
+    )
     if not rec["tokens_identical"]:
         print("ERROR: continuous and bucketed paths served different tokens")
         return 1
+    if not pref["tokens_identical"]:
+        print("ERROR: prefix reuse changed the served tokens")
+        return 1
     if rec["warm_speedup"] <= 1.0:
         print("WARNING: continuous batching did not beat the bucketed path")
+    if pref["warm_speedup"] <= 1.0:
+        print("WARNING: prefix reuse did not beat the monolithic scheduler")
     return 0
 
 

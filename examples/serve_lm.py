@@ -1,8 +1,11 @@
 """Serving example: the bucketed Engine vs the continuous-batching
-Scheduler on the same mixed-length request set.
+Scheduler on the same mixed-length request set, plus shared-prefix
+reuse over the paged KV-cache pool.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
+import dataclasses
+
 import jax
 import numpy as np
 
@@ -47,6 +50,26 @@ def main():
     print(f"  {s.decode_steps} decode steps, {s.prefills} prefills, "
           f"occupancy {s.occupancy:.0%}, "
           f"{sched.compile_counts()['total']} compiled programs")
+
+    print("\n-- shared-prefix reuse: one system prompt, many requests --")
+    # Reuse requires a lossless cache dtype (token-exactness gate).
+    cfg_px = dataclasses.replace(cfg, cache_dtype="float32")
+    params_px = lm.init(jax.random.PRNGKey(0), cfg_px)
+    sched = Scheduler(cfg_px, params_px, max_slots=3, max_len=96, page_size=8)
+    system = rng.integers(0, cfg.vocab_size, 40).astype(np.int32)
+    reqs = [
+        Request(prompt=np.concatenate(
+            [system, rng.integers(0, cfg.vocab_size, t).astype(np.int32)]
+        ), n_tokens=6)
+        for t in (2, 3, 5, 2, 4, 3)
+    ]
+    for res in sched.serve(reqs):
+        print(f"  rid={res.rid} prompt={res.prompt_len:2d} "
+              f"prefix_hit_tokens={res.prefix_hit_tokens:2d}")
+    pg = sched.last_stats.paging
+    print(f"  page hits={pg['prefix_hits']} misses={pg['prefix_misses']} "
+          f"hit_tokens={pg['prefix_hit_tokens']} "
+          f"peak_pages={pg['peak_pages_in_use']}/{pg['n_pages']}")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Local equivalent of .github/workflows/ci.yml: the tier-1 test command,
-# DSE perf record regeneration (batched vs sequential explore_multi ->
-# BENCH_dse.json), and a single-cell dry-run through the results store.
+# perf record regeneration (BENCH_dse.json / BENCH_serve.json), a
+# single-cell dry-run through the results store, and the docs-snippet
+# check (every python block in README/docs must execute).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m pytest -x -q -m "not slow" "$@"
@@ -10,3 +11,4 @@ PYTHONPATH=src python -m benchmarks.bench_serve --smoke
 PYTHONPATH=src python -m repro.launch.dryrun \
   --arch qwen2.5-3b --shape decode_32k --mesh single \
   --out results/dryrun-ci --force
+python scripts/check_docs.py

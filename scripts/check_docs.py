@@ -1,0 +1,126 @@
+#!/usr/bin/env python
+"""Execute every fenced ``python`` code block in README.md and docs/*.md.
+
+Documentation snippets rot silently: an API rename leaves the prose
+compiling in the reader's head and crashing in their shell.  This check
+extracts each markdown file's fenced ``python`` blocks and runs them —
+so a snippet that stops working fails CI like any other test.
+
+Rules:
+  * only fences tagged exactly ``python`` run; ``text``/``bash``/bare
+    fences are prose, not contracts,
+  * blocks within one FILE run sequentially in one interpreter and
+    share a namespace (docs build up examples step by step); files are
+    isolated from each other in separate subprocesses,
+  * a line containing ``<!-- check-docs: skip -->`` anywhere before a
+    fence (with only blank lines between) skips that one block — for
+    illustrative fragments that need hardware or long wall time,
+  * snippets run from the repo root with ``src/`` on PYTHONPATH, so
+    they must be smoke-sized (CI runs this on every PR).
+
+Usage:  python scripts/check_docs.py [files...]
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SKIP_MARK = "<!-- check-docs: skip -->"
+TIMEOUT_S = 900
+
+
+def extract_blocks(text: str):
+    """Yield (start_line, source) for each runnable ```python block."""
+    lines = text.splitlines()
+    blocks = []
+    in_block = False
+    skip_next = False
+    buf, start = [], 0
+    for i, line in enumerate(lines, start=1):
+        stripped = line.strip()
+        if not in_block:
+            if SKIP_MARK in stripped:
+                skip_next = True
+            elif stripped == "```python":
+                in_block = True
+                buf, start = [], i
+                if skip_next:
+                    in_block = "skipped"
+                skip_next = False
+            elif stripped and not stripped.startswith("```"):
+                # Any intervening prose cancels a pending skip marker.
+                skip_next = False
+        else:
+            if stripped == "```":
+                if in_block != "skipped":
+                    blocks.append((start, "\n".join(buf)))
+                in_block = False
+            else:
+                buf.append(line)
+    if in_block:
+        raise SystemExit(f"unterminated code fence starting at line {start}")
+    return blocks
+
+
+def run_file(path: pathlib.Path) -> bool:
+    blocks = extract_blocks(path.read_text())
+    if not blocks:
+        print(f"  {path.relative_to(REPO_ROOT)}: no python blocks")
+        return True
+    script = []
+    for start, src in blocks:
+        script.append(f"# --- {path.name} block @ line {start}")
+        script.append(f"print('--- running {path.name}:{start}')")
+        script.append(src)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        str(REPO_ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    rel = path.relative_to(REPO_ROOT)
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", "\n".join(script)],
+            cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+            timeout=TIMEOUT_S,
+        )
+    except subprocess.TimeoutExpired as e:
+        print(f"  {rel}: FAILED (timed out after {TIMEOUT_S}s)")
+        for stream in (e.stdout, e.stderr):
+            if stream:
+                out = stream if isinstance(stream, str) else stream.decode(
+                    "utf-8", "replace"
+                )
+                print(out[-2000:])
+        return False
+    if proc.returncode != 0:
+        print(f"  {rel}: FAILED")
+        print(proc.stdout[-2000:])
+        print(proc.stderr[-4000:])
+        return False
+    print(f"  {rel}: {len(blocks)} block(s) OK")
+    return True
+
+
+def main(argv) -> int:
+    if argv:
+        files = [pathlib.Path(a).resolve() for a in argv]
+    else:
+        files = [REPO_ROOT / "README.md"] + sorted(
+            (REPO_ROOT / "docs").glob("*.md")
+        )
+    print(f"check_docs: executing python snippets from {len(files)} file(s)")
+    ok = True
+    for f in files:
+        ok &= run_file(f)
+    if not ok:
+        print("check_docs: FAILED")
+        return 1
+    print("check_docs: all snippets executed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -15,7 +15,17 @@ fields may be ``(S,)`` arrays (whole-table evaluation), scalars (a
 single row, e.g. under ``vmap`` or from ``DesignSpace.scenario``), or
 any leading shape in between.  ``DesignSpace.evaluate`` delegates to
 :func:`evaluate`, so the sequential, batched, brute-force-oracle and
-island paths all share ONE evaluation pipeline.
+island paths all share ONE evaluation pipeline.  Host-facing consumers
+go through :func:`evaluate_host`, which buckets gene sets to
+power-of-two shapes so a handful of compiled evaluate+front programs
+serve the archive, the oracle and the explorer alike.
+
+Downstream of the front: ``dcimmap.plan`` provisions the winning design
+for a whole architecture, ``sim.DCIMMacroSim`` executes its numerics,
+and the serving stack (``repro.serve``, paged KV cache + shared-prefix
+reuse) evaluates it against token traffic — see docs/architecture.md
+for the full DSE -> codegen -> sim -> models -> serve flow and
+docs/dse.md for the batched-DSE API.
 """
 from __future__ import annotations
 

@@ -21,7 +21,14 @@ that let identical model code run on any mesh:
   names an already-consumed axis replicates on that axis instead.
 
 With no installed context (``use_mesh`` not entered) every annotation is
-an exact no-op, so all model code runs unsharded by default.
+an exact no-op, so all model code runs unsharded by default — this is
+what lets the serving stack (``repro.serve``: bucketed Engine, paged
+continuous-batching Scheduler) and the CPU test suite run the exact
+same model code that shards on a production mesh.  The DSE side reuses
+the same logical axes for its 2-D scenario x island meshes
+(``core.explorer.run_islands_multi``), and ``mamba``'s fused Pallas
+scan wraps itself in ``repro.dist.compat.shard_map`` with specs
+resolved through the active context.  See docs/architecture.md.
 """
 from __future__ import annotations
 

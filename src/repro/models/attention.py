@@ -159,6 +159,56 @@ def decode_attention(
     return o.reshape(B, 1, H, hdv)
 
 
+def prefix_attention(
+    q: jnp.ndarray,            # (B, T, H, hd) tail queries
+    k_all: jnp.ndarray,        # (B, L + T, Hk, hd)  [ctx pages ; tail]
+    v_all: jnp.ndarray,        # (B, L + T, Hk, hdv)
+    ctx_len: jnp.ndarray,      # (B,) valid context positions (0 disables ctx)
+    L: int,                    # static context capacity (ctx rows in k_all)
+) -> jnp.ndarray:
+    """Attention for tail-only prefill over a reused prefix.
+
+    Keys are the concatenation of a gathered page context (rows
+    ``[0, L)``, valid where ``j < ctx_len[b]``) and the tail's own K/V
+    (rows ``[L, L+T)``, causal within the tail).  Every query attends at
+    least its own tail position, so the softmax is never fully masked
+    even for ``ctx_len == 0`` rows (burst members without a prefix hit)
+    or right-padded tail rows.  One plain masked softmax — prefill runs
+    once per request, so O(T * (L+T)) score memory is acceptable where
+    the chunked-flash path would need an lse-merge."""
+    B, T, H, hd = q.shape
+    Hk = k_all.shape[2]
+    G = H // Hk
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, T, Hk, G, hd)
+    s = jnp.einsum(
+        "bqhgd,bshd->bhgqs", qg, k_all, preferred_element_type=jnp.float32
+    )                                                   # (B, Hk, G, T, L+T)
+    mask_ctx = jnp.arange(L)[None, :] < ctx_len[:, None]          # (B, L)
+    mask_tail = jnp.arange(T)[None, :] <= jnp.arange(T)[:, None]  # (T, T)
+    mask = jnp.concatenate(
+        [
+            jnp.broadcast_to(mask_ctx[:, None, :], (B, T, L)),
+            jnp.broadcast_to(mask_tail[None], (B, T, T)),
+        ],
+        axis=-1,
+    )                                                   # (B, T, L+T)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bhgqs,bshd->bqhgd", p.astype(v_all.dtype), v_all,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, T, H, v_all.shape[-1])
+
+
+def _gather_pages(pages: jnp.ndarray, block_table: jnp.ndarray) -> jnp.ndarray:
+    """(n_pages, page, ...) pages + (B, nb) block table -> contiguous
+    per-slot views (B, nb * page, ...)."""
+    g = pages[block_table]                      # (B, nb, page, ...)
+    return g.reshape(g.shape[0], -1, *g.shape[3:])
+
+
 # ================================= GQA =======================================
 def gqa_init(key, cfg, dtype):
     hd = cfg.head_dim or cfg.d_model // cfg.n_heads
@@ -228,6 +278,63 @@ def gqa_apply_decode(p, x, cfg, cache, pos, position_ids=None):
     o = decode_attention(q, k_cache, v_cache, pos)
     y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
     return y, {"k": k_cache, "v": v_cache}
+
+
+def gqa_apply_decode_paged(p, x, cfg, cache, block_table, pos):
+    """Slot-decode through a paged KV pool: cache k/v are
+    (n_pages, page, Hk, hd) shared pages, ``block_table`` is the (B, nb)
+    per-slot page list, ``pos`` the (B,) per-row lengths.  The new K/V
+    scatters into page ``bt[b, pos // page]`` row ``pos % page`` (always
+    a page the slot owns alone — shared prefix pages are fully covered
+    by the prompt and decode writes start at the prompt end), then the
+    slot's pages gather into a contiguous (B, nb * page, ...) view for
+    the same masked ``decode_attention`` the monolithic path runs."""
+    B = x.shape[0]
+    q, k, v = gqa_qkv(p, x, cfg, pos[:, None])
+    page = cache["k"].shape[1]
+    pg = jnp.take_along_axis(block_table, (pos // page)[:, None], axis=1)[:, 0]
+    rw = pos % page
+    k_pages = cache["k"].at[pg, rw].set(k[:, 0].astype(cache["k"].dtype))
+    v_pages = cache["v"].at[pg, rw].set(v[:, 0].astype(cache["v"].dtype))
+    o = decode_attention(
+        q, _gather_pages(k_pages, block_table),
+        _gather_pages(v_pages, block_table), pos,
+    )
+    y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
+    return y, {"k": k_pages, "v": v_pages}
+
+
+def gqa_apply_prefix(p, x, cfg, cache, block_table, ctx_len, wr_pg, wr_rw,
+                     use_context: bool = True):
+    """Paged (burst) prefill of tail tokens over an optional reused
+    prefix: queries sit at absolute positions ``ctx_len[b] + t`` (RoPE),
+    attend the gathered context pages (valid where ``j < ctx_len``) plus
+    the tail causally, and the tail K/V scatters into the slot's pages
+    at ``(wr_pg, wr_rw)`` (right-pad writes land in the garbage page).
+    The context is read from the *pre-write* pool — a request never
+    shares a page with a burst member whose fill is still pending (the
+    scheduler splits such bursts), so the gather sees only pages filled
+    by earlier programs.
+
+    ``use_context=False`` (static) compiles the prefix machinery out:
+    when the scheduler's prefix reuse is gated off, ``ctx_len`` is
+    always 0 and gathering max_len always-masked context keys per layer
+    would be pure waste."""
+    B, T, _ = x.shape
+    q, k, v = gqa_qkv(p, x, cfg, ctx_len[:, None])
+    if use_context:
+        k_ctx = _gather_pages(cache["k"], block_table).astype(k.dtype)
+        v_ctx = _gather_pages(cache["v"], block_table).astype(v.dtype)
+        k_all = jnp.concatenate([k_ctx, k], axis=1)
+        v_all = jnp.concatenate([v_ctx, v], axis=1)
+        L = k_ctx.shape[1]
+    else:
+        k_all, v_all, L = k, v, 0
+    o = prefix_attention(q, k_all, v_all, ctx_len, L)
+    k_pages = cache["k"].at[wr_pg, wr_rw].set(k.astype(cache["k"].dtype))
+    v_pages = cache["v"].at[wr_pg, wr_rw].set(v.astype(cache["v"].dtype))
+    y = dense(p["wo"], o.reshape(B, T, -1).astype(x.dtype))
+    return y, {"k": k_pages, "v": v_pages}
 
 
 # ================================= MLA =======================================
@@ -312,13 +419,46 @@ def mla_apply_train(p, x, cfg, position_ids=None):
     return y, (c_kv, k_rope)
 
 
+def _mla_absorb_weights(p, cfg):
+    m: MLAConfig = cfg.mla
+    H = cfg.n_heads
+    w_kv_b = p["kv_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+    return w_kv_b[:, :, : m.qk_nope_dim], w_kv_b[:, :, m.qk_nope_dim:]
+
+
+def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv, krope, pos):
+    """One absorbed-MLA decode attention: scores and context computed in
+    the compressed c_kv space against a (B, S, r_kv)/(B, S, d_rope)
+    cache view.  ``pos`` is a scalar or a (B,) vector; rows past ``pos``
+    are masked.  Shared by the monolithic and paged decode paths so the
+    two can never diverge numerically."""
+    m: MLAConfig = cfg.mla
+    B = q_nope.shape[0]
+    w_uk, w_uv = _mla_absorb_weights(p, cfg)
+
+    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (
+        jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv.astype(jnp.float32))
+        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
+    ) * scale                                          # (B,H,1,S)
+    S_max = ckv.shape[1]
+    if jnp.ndim(pos) == 1:
+        mask = jnp.arange(S_max)[None, :] <= pos[:, None]   # (B, S)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    else:
+        mask = jnp.arange(S_max) <= pos
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))
+    return jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+
+
 def mla_apply_decode(p, x, cfg, cache, pos):
     """Absorbed MLA decode: scores/context computed in the compressed
     c_kv space — the cache stays (B, S, r_kv) + (B, S, d_rope).  ``pos``
     is a scalar or a (B,) vector of per-row lengths (slotted serving)."""
-    m: MLAConfig = cfg.mla
     B = x.shape[0]
-    H = cfg.n_heads
     per_row = jnp.ndim(pos) == 1
     off = pos[:, None] if per_row else pos
     q_nope, q_rope = _mla_q(p, x, cfg, off)           # (B,1,H,dn),(B,1,H,dr)
@@ -334,26 +474,68 @@ def mla_apply_decode(p, x, cfg, cache, pos):
         krope = jax.lax.dynamic_update_slice(
             cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, pos, 0)
         )
-
-    w_kv_b = p["kv_b"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
-    w_uk = w_kv_b[:, :, : m.qk_nope_dim]              # (rkv, H, dn)
-    w_uv = w_kv_b[:, :, m.qk_nope_dim:]               # (rkv, H, dv)
-
-    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
-    scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
-    s = (
-        jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv.astype(jnp.float32))
-        + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
-    ) * scale                                          # (B,H,1,S)
-    S_max = ckv.shape[1]
-    if per_row:
-        mask = jnp.arange(S_max)[None, :] <= pos[:, None]   # (B, S)
-        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-    else:
-        mask = jnp.arange(S_max) <= pos
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
-    pattn = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))
-    o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+    o = _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv, krope, pos)
     y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
     return y, {"c_kv": ckv, "k_rope": krope}
+
+
+def mla_apply_decode_paged(p, x, cfg, cache, block_table, pos):
+    """Absorbed MLA decode through a paged compressed cache: pages are
+    (n_pages, page, r_kv)/(n_pages, page, d_rope); the new row scatters
+    into the slot's page at ``pos`` and the block table gathers the
+    contiguous per-slot view for ``_mla_absorbed_attend``."""
+    B = x.shape[0]
+    q_nope, q_rope = _mla_q(p, x, cfg, pos[:, None])
+    c_new, kr_new = _mla_ckv(p, x, cfg, pos[:, None])
+    page = cache["c_kv"].shape[1]
+    pg = jnp.take_along_axis(block_table, (pos // page)[:, None], axis=1)[:, 0]
+    rw = pos % page
+    ckv_pages = cache["c_kv"].at[pg, rw].set(c_new[:, 0].astype(cache["c_kv"].dtype))
+    kr_pages = cache["k_rope"].at[pg, rw].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
+    o = _mla_absorbed_attend(
+        p, cfg, q_nope, q_rope,
+        _gather_pages(ckv_pages, block_table),
+        _gather_pages(kr_pages, block_table), pos,
+    )
+    y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
+    return y, {"c_kv": ckv_pages, "k_rope": kr_pages}
+
+
+def mla_apply_prefix(p, x, cfg, cache, block_table, ctx_len, wr_pg, wr_rw,
+                     use_context: bool = True):
+    """Paged (burst) MLA prefill over an optional reused prefix: per-head
+    K/V are reconstructed from the compressed cache for BOTH the gathered
+    context pages and the tail (exactly as ``mla_apply_train``
+    reconstructs them for a full prompt), then one ``prefix_attention``
+    runs the ctx+causal-tail mask.  The tail's compressed rows scatter
+    into the slot's pages at ``(wr_pg, wr_rw)``.  ``use_context=False``
+    (static) compiles the context gather out, as in
+    ``gqa_apply_prefix``."""
+    m: MLAConfig = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg, ctx_len[:, None])
+    c_kv, k_rope = _mla_ckv(p, x, cfg, ctx_len[:, None])
+
+    if use_context:
+        ckv_ctx = _gather_pages(cache["c_kv"], block_table).astype(c_kv.dtype)
+        kr_ctx = _gather_pages(cache["k_rope"], block_table).astype(k_rope.dtype)
+        L = ckv_ctx.shape[1]
+        c_all = jnp.concatenate([ckv_ctx, c_kv], axis=1)     # (B, L+T, rkv)
+        kr_all = jnp.concatenate([kr_ctx, k_rope], axis=1)   # (B, L+T, dr)
+    else:
+        c_all, kr_all, L = c_kv, k_rope, 0
+
+    kvb = dense(p["kv_b"], c_all).reshape(B, L + T, H, m.qk_nope_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kvb, [m.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr_all[:, :, None, :], (B, L + T, H, m.qk_rope_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = prefix_attention(q, k, v, ctx_len, L)
+
+    ckv_pages = cache["c_kv"].at[wr_pg, wr_rw].set(c_kv.astype(cache["c_kv"].dtype))
+    kr_pages = cache["k_rope"].at[wr_pg, wr_rw].set(k_rope.astype(cache["k_rope"].dtype))
+    y = dense(p["wo"], o.reshape(B, T, -1).astype(x.dtype))
+    return y, {"c_kv": ckv_pages, "k_rope": kr_pages}

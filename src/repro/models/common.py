@@ -48,6 +48,41 @@ def dense(p, x):
     return y
 
 
+def last_valid_hidden(h, valid_len):
+    """Gather the hidden state of the last *real* token per row.
+
+    ``h`` is (B, S, D); ``valid_len`` is None (take index S-1), a traced
+    scalar (all rows share one valid length — single-request bucketed
+    prefill), or a (B,) vector of per-row valid lengths (batched burst
+    prefill, where co-batched requests have different tail lengths).
+    Rows with ``valid_len == 0`` (burst padding) clamp to index 0; their
+    output is junk the caller must ignore.  Returns (B, 1, D)."""
+    if valid_len is None:
+        return h[:, -1:]
+    idx = jnp.maximum(jnp.asarray(valid_len, jnp.int32) - 1, 0)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (h.shape[0],))
+    return jnp.take_along_axis(h, idx[:, None, None], axis=1)
+
+
+def page_write_indices(block_tables, ctx_len, tail_valid, T, page_size):
+    """(page, row) scatter indices for writing T tail positions into a
+    paged KV pool.
+
+    Position ``t`` of row ``b`` lands at global sequence position
+    ``ctx_len[b] + t``, i.e. page ``block_tables[b, g // page_size]``,
+    row ``g % page_size``.  Positions at or past ``tail_valid`` (bucket
+    right-padding) are redirected to the reserved garbage page 0 so pad
+    junk can never overwrite a live page.  Returns two (B, T) int32
+    arrays (page_idx, row_idx)."""
+    gpos = ctx_len[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]
+    in_tail = jnp.arange(T)[None, :] < tail_valid[:, None]
+    pg = jnp.take_along_axis(block_tables, gpos // page_size, axis=1)
+    pg = jnp.where(in_tail, pg, 0)
+    rw = jnp.where(in_tail, gpos % page_size, 0)
+    return pg.astype(jnp.int32), rw.astype(jnp.int32)
+
+
 # --- norms -------------------------------------------------------------------
 def norm_init(d: int, kind: str, dtype):
     if kind == "rms":

@@ -1,6 +1,12 @@
 """LM assembly: Embed -> scan(blocks) -> Norm -> Head, with train / prefill
 / decode entry points for every assigned architecture.
 
+Serving caches come in two layouts: monolithic per-slot regions
+(``init_cache`` / ``prefill`` / ``decode_step`` / ``insert_cache_slot``)
+and the paged pool (``init_paged_pool`` / ``prefill_paged`` /
+``decode_step_paged``) where attention K/V lives in shared refcounted
+pages addressed through per-slot block tables — see docs/serving.md.
+
 Layers are scanned in groups of ``cfg.scan_period()`` (1 for uniform
 stacks; 8 for Jamba's 1-attn:7-mamba interleave) so the HLO stays small
 at 61-80 layers.  Activation remat wraps each scanned group.  Sequence
@@ -18,7 +24,14 @@ import jax.numpy as jnp
 from repro.dist.sharding import shard_act
 from . import attention as attn
 from . import common, mamba as ssm, moe as moe_mod
-from .common import dense, dense_init, norm_apply, norm_init
+from .common import (
+    dense,
+    dense_init,
+    last_valid_hidden,
+    norm_apply,
+    norm_init,
+    page_write_indices,
+)
 from .config import LMConfig
 
 
@@ -111,6 +124,19 @@ def _block_train(bp, x, cfg: LMConfig, mk: str, fk: str, position_ids, training:
     return x, cacheable, aux
 
 
+def _apply_ffn(bp, x, cfg: LMConfig, fk: str):
+    """Inference-mode FFN half of a block (shared by the decode and
+    paged-prefill block bodies)."""
+    if fk == "none":
+        return x
+    h2 = norm_apply(bp["ln2"], x, cfg.norm)
+    if fk == "moe":
+        y2, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg, training=False)
+    else:
+        y2 = common.ffn_apply(bp["ffn"], h2, cfg.act)
+    return x + y2
+
+
 def _block_decode(bp, x, cfg: LMConfig, mk: str, fk: str, cache, pos, position_ids):
     h = norm_apply(bp["ln1"], x, cfg.norm)
     if mk == "gqa":
@@ -119,15 +145,69 @@ def _block_decode(bp, x, cfg: LMConfig, mk: str, fk: str, cache, pos, position_i
         y, cache = attn.mla_apply_decode(bp["mixer"], h, cfg, cache, pos)
     else:
         y, cache = ssm.mamba_step(bp["mixer"], h, cfg, cache)
-    x = x + y
-    if fk != "none":
-        h2 = norm_apply(bp["ln2"], x, cfg.norm)
-        if fk == "moe":
-            y2, _ = moe_mod.moe_apply(bp["ffn"], h2, cfg, training=False)
-        else:
-            y2 = common.ffn_apply(bp["ffn"], h2, cfg.act)
-        x = x + y2
-    return x, cache
+    return _apply_ffn(bp, x + y, cfg, fk), cache
+
+
+def _block_decode_paged(bp, x, cfg: LMConfig, mk: str, fk: str, cache,
+                        block_tables, pos):
+    """One decode block over a paged pool: attention mixers read/write
+    shared pages through the block table; SSM mixers keep per-slot O(1)
+    state (rows [0, B) of the pool's n_slots+1 rows — the last row is
+    the garbage slot that absorbs burst-padding prefill writes)."""
+    B = x.shape[0]
+    h = norm_apply(bp["ln1"], x, cfg.norm)
+    if mk == "gqa":
+        y, cache = attn.gqa_apply_decode_paged(
+            bp["mixer"], h, cfg, cache, block_tables, pos
+        )
+    elif mk == "mla":
+        y, cache = attn.mla_apply_decode_paged(
+            bp["mixer"], h, cfg, cache, block_tables, pos
+        )
+    else:
+        y, new = ssm.mamba_step(
+            bp["mixer"], h, cfg,
+            {"h": cache["h"][:B], "conv": cache["conv"][:B]},
+        )
+        cache = {
+            "h": cache["h"].at[:B].set(new["h"]),
+            "conv": cache["conv"].at[:B].set(new["conv"].astype(cache["conv"].dtype)),
+        }
+    return _apply_ffn(bp, x + y, cfg, fk), cache
+
+
+def _block_prefill_paged(bp, x, cfg: LMConfig, mk: str, fk: str, cache,
+                         block_tables, ctx_len, tail_valid, wr_pg, wr_rw,
+                         slots, use_context: bool):
+    """One paged-prefill block: attention mixers attend [reused prefix
+    pages ; causal tail] and scatter the tail K/V into the slot's pages;
+    SSM mixers run the chunked mix over the tail (per-row valid_len) and
+    scatter the post-prompt state at ``slots`` (prefix reuse never
+    applies to SSM layers — the scheduler guarantees ctx_len == 0 for
+    architectures with recurrent state).  ``use_context=False`` (static)
+    compiles the context gather out entirely — the shape a scheduler
+    with prefix reuse gated off uses."""
+    h = norm_apply(bp["ln1"], x, cfg.norm)
+    if mk == "gqa":
+        y, cache = attn.gqa_apply_prefix(
+            bp["mixer"], h, cfg, cache, block_tables, ctx_len, wr_pg, wr_rw,
+            use_context,
+        )
+    elif mk == "mla":
+        y, cache = attn.mla_apply_prefix(
+            bp["mixer"], h, cfg, cache, block_tables, ctx_len, wr_pg, wr_rw,
+            use_context,
+        )
+    else:
+        y, state = ssm.mamba_mix(
+            bp["mixer"], h, cfg, cfg.mamba_chunk, return_state=True,
+            training=False, valid_len=tail_valid,
+        )
+        cache = {
+            "h": cache["h"].at[slots].set(state["h"]),
+            "conv": cache["conv"].at[slots].set(state["conv"].astype(cache["conv"].dtype)),
+        }
+    return _apply_ffn(bp, x + y, cfg, fk), cache
 
 
 # ------------------------------ embedding -------------------------------------
@@ -293,13 +373,7 @@ def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None,
     h, caches, _ = forward_hidden(params, x, cfg, pos_ids, collect_cache=True,
                                   training=False, valid_len=valid_len)
     h = norm_apply(params["ln_f"], h, cfg.norm)
-    if valid_len is None:
-        h_last = h[:, -1:]
-    else:
-        h_last = jax.lax.dynamic_slice(
-            h, (0, valid_len - 1, 0), (B, 1, h.shape[2])
-        )
-    logits = _head_logits(params, h_last, cfg)
+    logits = _head_logits(params, last_valid_hidden(h, valid_len), cfg)
 
     period = cfg.scan_period()
     cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.cache_dtype]
@@ -329,6 +403,120 @@ def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None,
                 {"h": got["h"], "conv": got["conv"].astype(cdt)}
             )
     return tuple(out), logits
+
+
+# --------------------------- paged KV-cache pool -------------------------------
+def init_paged_pool(cfg: LMConfig, n_slots: int, n_pages: int, page_size: int):
+    """Paged cache pool: attention caches are SHARED pages instead of
+    per-slot monolithic regions.
+
+    Attention leaves are (groups, n_pages, page_size, ...) — a slot's
+    logical (max_len, ...) cache is the concatenation of the pages its
+    block-table row names, which lets fully-covered prompt-prefix pages
+    be refcounted across requests (shared-prefix reuse).  Page 0 is the
+    reserved GARBAGE page: never allocated, it absorbs the clamped
+    writes of inactive decode slots and the right-pad writes of burst
+    prefill, so junk can never land in a live page.
+
+    SSM state is O(1) in sequence length, so it stays per-slot:
+    (groups, n_slots + 1, ...), where row ``n_slots`` is the garbage
+    SLOT that absorbs the state writes of burst-padding rows."""
+    period = cfg.scan_period()
+    groups = cfg.n_layers // period
+    cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.cache_dtype]
+
+    def one(mk):
+        if mk == "gqa":
+            return {
+                "k": jnp.zeros((groups, n_pages, page_size, cfg.n_kv, cfg.hd), cdt),
+                "v": jnp.zeros((groups, n_pages, page_size, cfg.n_kv, cfg.hd), cdt),
+            }
+        if mk == "mla":
+            m = cfg.mla
+            return {
+                "c_kv": jnp.zeros((groups, n_pages, page_size, m.kv_lora_rank), cdt),
+                "k_rope": jnp.zeros((groups, n_pages, page_size, m.qk_rope_dim), cdt),
+            }
+        c = ssm.mamba_cache_init(cfg, n_slots + 1, cdt)
+        return jax.tree.map(
+            lambda a: jnp.zeros((groups,) + a.shape, a.dtype), c
+        )
+
+    return tuple(one(cfg.mixer_kind(pos)) for pos in range(period))
+
+
+def decode_step_paged(params, inputs, pos, pool, block_tables, cfg: LMConfig):
+    """One decode step over all slots, reading/writing attention caches
+    THROUGH the block tables (``(B, max_len // page_size)`` int32 page
+    ids per slot) inside the one jitted program.  ``pos`` is the (B,)
+    per-slot length vector; masking makes the result bitwise identical
+    to ``decode_step`` over equivalent monolithic per-slot caches."""
+    x = embed_inputs(params, inputs, cfg, offset=pos[:, None])
+    period = cfg.scan_period()
+    kinds = [(cfg.mixer_kind(i), cfg.ffn_of(i)) for i in range(period)]
+
+    def scan_body(x, xs):
+        gp, gcaches = xs
+        new_caches = []
+        for p_i in range(period):
+            mk, fk = kinds[p_i]
+            x, c = _block_decode_paged(
+                gp[p_i], x, cfg, mk, fk, gcaches[p_i], block_tables, pos
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_pool = jax.lax.scan(scan_body, x, (tuple(params["blocks"]), pool))
+    h = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = _head_logits(params, h, cfg)
+    return logits, new_pool
+
+
+def prefill_paged(params, batch, cfg: LMConfig, pool, block_tables, slots,
+                  ctx_len, tail_valid, page_size: int,
+                  use_context: bool = True):
+    """Batched burst prefill into the paged pool.
+
+    ``batch["tokens"]`` is (B, T): each row holds one admitted request's
+    prompt TAIL (the part after its reused prefix), right-padded to the
+    tail bucket T.  Per row: ``ctx_len`` counts reused prefix tokens
+    (0 without a hit), ``tail_valid`` the real tail tokens, ``slots``
+    the decode slot (the garbage slot ``n_slots`` for burst padding
+    rows), and ``block_tables[b]`` the slot's page list — prefix pages
+    resident and already filled, tail pages freshly allocated.
+
+    Tail positions are absolute (``ctx_len + t``) for RoPE/sinusoidal
+    embeddings; attention runs [prefix pages ; causal tail]; tail K/V
+    scatters into the slot's pages (pads to the garbage page); SSM state
+    scatters at ``slots``.  ``use_context=False`` (static, for
+    schedulers whose prefix reuse is gated off — ctx_len is then always
+    0) skips the per-layer context gather entirely.  Returns
+    (pool, (B, 1, V) logits at each row's last real token)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = embed_inputs(params, batch, cfg, offset=ctx_len[:, None])
+    wr_pg, wr_rw = page_write_indices(
+        block_tables, ctx_len, tail_valid, T, page_size
+    )
+    period = cfg.scan_period()
+    kinds = [(cfg.mixer_kind(i), cfg.ffn_of(i)) for i in range(period)]
+
+    def scan_body(x, xs):
+        gp, gcaches = xs
+        new_caches = []
+        for p_i in range(period):
+            mk, fk = kinds[p_i]
+            x, c = _block_prefill_paged(
+                gp[p_i], x, cfg, mk, fk, gcaches[p_i], block_tables,
+                ctx_len, tail_valid, wr_pg, wr_rw, slots, use_context,
+            )
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_pool = jax.lax.scan(scan_body, x, (tuple(params["blocks"]), pool))
+    h = norm_apply(params["ln_f"], x, cfg.norm)
+    logits = _head_logits(params, last_valid_hidden(h, tail_valid), cfg)
+    return new_pool, logits
 
 
 def insert_cache_slot(pool, row_caches, slot):

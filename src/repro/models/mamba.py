@@ -98,6 +98,17 @@ def _scan_chunk(h0, dA, dBu):
     return aa * h0[:, None] + bb                          # (B, C, Di, N)
 
 
+def _valid_mask(S: int, valid_len) -> jnp.ndarray:
+    """(1, S) or (B, S) bool mask of real (non-right-pad) positions.
+    ``valid_len`` may be a traced scalar (one valid length for the whole
+    batch — single-request bucketed prefill) or a (B,) vector (batched
+    burst prefill: each co-batched request has its own tail length)."""
+    vl = jnp.asarray(valid_len)
+    if vl.ndim == 0:
+        vl = vl[None]
+    return jnp.arange(S)[None, :] < vl[:, None]
+
+
 def _pallas_scan(p, u, cfg, valid_len=None):
     """Fused Pallas selective scan (§Perf: one HBM pass instead of the
     associative scan's ~16).  Wrapped in shard_map when a mesh context is
@@ -110,7 +121,7 @@ def _pallas_scan(p, u, cfg, valid_len=None):
     if valid_len is not None:
         # dt = 0 at padded steps -> dA = exp(0) = 1, dBu = dt*B*u = 0:
         # the kernel carries the state through pads unchanged.
-        dt = jnp.where((jnp.arange(u.shape[1]) < valid_len)[None, :, None], dt, 0.0)
+        dt = jnp.where(_valid_mask(u.shape[1], valid_len)[..., None], dt, 0.0)
     D_skip = p["D"]
 
     def run(u_, dt_, b_, c_, a_, d_):
@@ -148,7 +159,8 @@ def mamba_mix(p, x, cfg, chunk: int, return_state: bool = False,
     the fused Pallas kernel (no autodiff rule -> training keeps the
     differentiable associative scan).
 
-    ``valid_len`` (traced scalar) marks positions >= valid_len as
+    ``valid_len`` (traced scalar, or a (B,) vector of per-row lengths for
+    batched burst prefill) marks positions >= valid_len as
     right-padding: their recurrence step is forced to the identity
     (dA = 1, dBu = 0, i.e. dt = 0) so the returned state is the state
     after the *valid* prefix, and the conv tail is taken ending at
@@ -175,7 +187,7 @@ def mamba_mix(p, x, cfg, chunk: int, return_state: bool = False,
     else:
         dA, dBu, Cc = _ssm_coeffs(p, u, cfg)
         if valid_len is not None:
-            keep = (jnp.arange(S) < valid_len)[None, :, None, None]
+            keep = _valid_mask(S, valid_len)[..., None, None]
             dA = jnp.where(keep, dA, 1.0)
             dBu = jnp.where(keep, dBu, 0.0)
 
@@ -210,10 +222,18 @@ def mamba_mix(p, x, cfg, chunk: int, return_state: bool = False,
         # left zero-pad makes valid_len < d_conv-1 match the short-prompt
         # branch above bit for bit.
         upad_l = jnp.pad(u_raw, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
-        tail = jax.lax.dynamic_slice(
-            upad_l, (0, valid_len, 0),
-            (u_raw.shape[0], s.d_conv - 1, u_raw.shape[2]),
-        )
+        vl = jnp.asarray(valid_len)
+        if vl.ndim == 0:
+            tail = jax.lax.dynamic_slice(
+                upad_l, (0, valid_len, 0),
+                (u_raw.shape[0], s.d_conv - 1, u_raw.shape[2]),
+            )
+        else:
+            # Per-row valid lengths (batched burst prefill): gather each
+            # row's window — same values dynamic_slice would produce row
+            # by row.
+            idx = vl[:, None] + jnp.arange(s.d_conv - 1)[None, :]
+            tail = jnp.take_along_axis(upad_l, idx[..., None], axis=1)
     return out, {"h": h_last, "conv": tail}
 
 

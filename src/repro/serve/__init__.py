@@ -6,6 +6,13 @@ from .engine import (  # noqa: F401
     derive_request_keys,
     sample_tokens,
 )
+from .paging import (  # noqa: F401
+    PagePool,
+    PageStats,
+    check_page_capacity,
+    pages_needed,
+    prefix_page_hashes,
+)
 from .scheduler import (  # noqa: F401
     Request,
     RequestResult,

@@ -5,7 +5,10 @@ generation is greedy or temperature sampling.  Sampling is *per request*:
 PRNG keys derive from ``(seed, request_id)`` (``derive_request_keys``) so
 a request's sampled continuation is reproducible no matter which batch,
 slot or arrival order served it — the property the continuous-batching
-scheduler (``repro.serve.scheduler``) is verified against.
+scheduler (``repro.serve.scheduler``: paged KV-cache pool, shared-prefix
+reuse, burst prefill) is verified against.  The Engine is deliberately
+the SIMPLE path: per-request `generate` here defines the reference
+tokens for every scheduler feature (docs/serving.md).
 
 DCIM-numerics execution of linear layers (the bridge to the paper's
 compiler) lives in ``repro.sim.functional``; pass ``dcim_sim=`` to route

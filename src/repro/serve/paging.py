@@ -1,0 +1,239 @@
+"""Host-side accounting for the paged KV-cache pool: page allocation,
+refcounts, and the shared-prefix hash index.
+
+The device side (``repro.models.lm.init_paged_pool`` and friends) is a
+dumb array of pages; every policy decision lives here, on the host:
+
+* **allocation** — pages are a fixed pool of ids ``1 .. n_pages-1``
+  (page 0 is the reserved garbage page that absorbs masked writes).
+  Allocation prefers never-used/plain-freed pages and falls back to
+  evicting least-recently-used *cached* prefix pages.
+* **refcounts** — a page's refcount is the number of live requests whose
+  block table names it.  Shared prefix pages are refcounted up on every
+  hit; retirement decrements.  A prefix page whose refcount drops to 0
+  is not freed — it moves to the CACHED state (content intact, still in
+  the hash index) so a later request with the same prefix can still hit
+  it; it is only reclaimed when allocation pressure evicts it.
+* **prefix index** — prompts are hashed at page granularity with a
+  rolling chain (``h_i = sha1(h_{i-1} || tokens[i*page : (i+1)*page])``)
+  so a chain hash identifies the ENTIRE prefix up to that page, not just
+  the page's own tokens.  ``match_prefix`` walks the chain and returns
+  the longest resident run of pages.  Only pages fully covered by the
+  prompt are ever indexed — a page decode will write into must stay
+  private.  The match is additionally capped one token short of the full
+  prompt so every admitted request prefills at least its last token
+  (the logits source for its first sampled token).
+
+``check_page_capacity`` is the page-pool half of the admission contract:
+like :func:`repro.serve.engine.check_capacity` it raises ``ValueError``
+(a real error, not an assert) for requests that could never be served
+even by an empty pool.  Transient exhaustion — enough total pages, but
+other requests hold them — is not an error: the scheduler keeps the
+request queued until retirements free pages.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+GARBAGE_PAGE = 0
+
+
+def pages_needed(prompt_len: int, n_tokens: int, page_size: int) -> int:
+    """Pages a request can touch over its whole life: prompt positions
+    [0, P) plus decode writes at [P, P + n_tokens - 1) (the last sampled
+    token is returned but never written back)."""
+    return -(-(prompt_len + max(n_tokens, 1) - 1) // page_size)
+
+
+def check_page_capacity(prompt_len: int, n_tokens: int, page_size: int,
+                        usable_pages: int) -> None:
+    """Admission control for the paged pool: reject requests that exceed
+    the pool outright (mirrors ``serve.check_capacity``'s ValueError
+    contract — transient exhaustion is handled by queueing instead)."""
+    need = pages_needed(prompt_len, n_tokens, page_size)
+    if need > usable_pages:
+        raise ValueError(
+            f"request exceeds page-pool capacity: prompt length "
+            f"{prompt_len} + n_tokens {n_tokens} needs {need} pages of "
+            f"{page_size} tokens > {usable_pages} usable pages; shorten "
+            f"the prompt, request fewer tokens, or build the Scheduler "
+            f"with more pages"
+        )
+
+
+def prefix_page_hashes(prompt: np.ndarray, page_size: int) -> List[str]:
+    """Chain hashes for every page FULLY covered by the prompt.  Entry i
+    identifies tokens [0, (i+1)*page_size) — the whole prefix, so equal
+    hashes imply equal prefixes (up to SHA-1 collisions)."""
+    prompt = np.asarray(prompt, np.int32)
+    out: List[str] = []
+    h = hashlib.sha1(b"kv-prefix")
+    for i in range(prompt.size // page_size):
+        h = h.copy()
+        h.update(prompt[i * page_size:(i + 1) * page_size].tobytes())
+        out.append(h.hexdigest())
+    return out
+
+
+@dataclasses.dataclass
+class PageStats:
+    """Counters exposed through ``Scheduler.last_stats``."""
+    n_pages: int = 0                  # usable pages (garbage excluded)
+    page_size: int = 0
+    prefix_hits: int = 0              # pages reused via the prefix index
+    prefix_misses: int = 0            # full prompt pages that had to be filled
+    prefix_hit_tokens: int = 0        # prompt tokens whose prefill was skipped
+    evictions: int = 0                # cached prefix pages reclaimed
+    peak_pages_in_use: int = 0        # max live (refcount > 0) pages
+    cached_pages: int = 0             # refcount-0 pages still in the index
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PagePool:
+    """Host-side page allocator + refcounts + shared-prefix index.
+
+    Pages move between three states: FREE (unallocated, content
+    meaningless), LIVE (refcount > 0, named by at least one block
+    table), and CACHED (refcount 0 but content is an indexed prompt
+    prefix — reusable until evicted, LRU order)."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError(f"need >= 2 pages (one is garbage), got {n_pages}")
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {page_size}")
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.usable_pages = n_pages - 1           # page 0 is garbage
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))  # pop() -> 1 first
+        self._ref = np.zeros(n_pages, np.int32)
+        # chain hash -> page id, for pages whose content is an indexed
+        # prompt prefix (LIVE or CACHED).
+        self._index: Dict[str, int] = {}
+        self._page_hash: Dict[int, str] = {}      # inverse of _index
+        # CACHED pages in LRU order (oldest first).
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self.stats = PageStats(n_pages=self.usable_pages, page_size=page_size)
+
+    # ------------------------------ queries ---------------------------------
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    @property
+    def live_pages(self) -> int:
+        return int((self._ref[1:] > 0).sum())
+
+    def available(self) -> int:
+        """Pages allocatable right now: free + evictable cached."""
+        return len(self._free) + len(self._lru)
+
+    def match_prefix(self, prompt: np.ndarray) -> Tuple[List[int], List[str]]:
+        """Longest resident prefix run for ``prompt``.
+
+        Returns ``(pages, hashes)`` where ``hashes`` covers every fully
+        prompt-covered page (capped one token short of the prompt so the
+        tail prefill is never empty) and ``pages[:k]`` are the resident
+        pages for the first ``k`` hashes.  The walk stops at the first
+        miss: a resident child behind an evicted parent is unreachable
+        by construction (chain hashing)."""
+        prompt = np.asarray(prompt, np.int32)
+        # Cap: at least the last prompt token must be prefilled.
+        max_pages = (prompt.size - 1) // self.page_size
+        hashes = prefix_page_hashes(prompt, self.page_size)[:max_pages]
+        pages: List[int] = []
+        for h in hashes:
+            page = self._index.get(h)
+            if page is None:
+                break
+            pages.append(page)
+        return pages, hashes
+
+    # ----------------------------- transitions ------------------------------
+    def _evict_one(self) -> int:
+        page, _ = self._lru.popitem(last=False)       # oldest cached page
+        h = self._page_hash.pop(page)
+        del self._index[h]
+        self.stats.evictions += 1
+        return page
+
+    def allocate(self, n: int) -> List[int]:
+        """Allocate ``n`` fresh private pages (refcount 1 each), evicting
+        LRU cached prefix pages under pressure.  Raises RuntimeError on
+        true exhaustion — the scheduler checks ``available()`` first, so
+        hitting this is a bug, not an admission-control path."""
+        if n > self.available():
+            raise RuntimeError(
+                f"page pool exhausted: need {n}, have {self.available()}"
+            )
+        out = []
+        for _ in range(n):
+            page = self._free.pop() if self._free else self._evict_one()
+            self._ref[page] = 1
+            out.append(page)
+        self._track_peak()
+        return out
+
+    def ref(self, pages: List[int]) -> None:
+        """Take a reference on resident prefix pages (a hit).  CACHED
+        pages return to LIVE."""
+        for page in pages:
+            if self._ref[page] == 0:
+                self._lru.pop(page, None)
+            self._ref[page] += 1
+        self.stats.prefix_hits += len(pages)
+        self.stats.prefix_hit_tokens += len(pages) * self.page_size
+        self._track_peak()
+
+    def unref(self, pages: List[int]) -> None:
+        """Roll back a :meth:`ref` that did not lead to an admission
+        (e.g. the page pool could not cover the request's fresh pages).
+        Reverses both the refcounts and the hit counters the ref charged;
+        ``peak_pages_in_use`` stays a true high-water mark, transient
+        pins included."""
+        self.release(pages)
+        self.stats.prefix_hits -= len(pages)
+        self.stats.prefix_hit_tokens -= len(pages) * self.page_size
+
+    def register_prefix(self, hashes: List[str], pages: List[int]) -> None:
+        """Index freshly-allocated pages as prefix pages (content is
+        filled by the admission's prefill program before any later
+        admission can look them up)."""
+        for h, page in zip(hashes, pages):
+            old = self._index.get(h)
+            if old is not None and old != page:
+                # The same prefix was filled twice concurrently (burst
+                # split); keep the existing entry, the new page stays a
+                # private unindexed page.
+                continue
+            self._index[h] = page
+            self._page_hash[page] = h
+        self.stats.prefix_misses += len(hashes)
+
+    def release(self, pages: List[int]) -> None:
+        """Drop one reference per page.  Zero-ref indexed pages become
+        CACHED (evictable, still hittable); zero-ref private pages go
+        straight back to the free list."""
+        for page in pages:
+            if self._ref[page] < 1:
+                raise ValueError(f"page {page} is not live")
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                if page in self._page_hash:
+                    self._lru[page] = None
+                    self._lru.move_to_end(page)
+                else:
+                    self._free.append(page)
+        self.stats.cached_pages = len(self._lru)
+
+    def _track_peak(self) -> None:
+        self.stats.peak_pages_in_use = max(
+            self.stats.peak_pages_in_use, self.live_pages
+        )
+        self.stats.cached_pages = len(self._lru)

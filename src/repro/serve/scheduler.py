@@ -1,29 +1,46 @@
-"""Continuous-batching serving: slot-based KV cache pool + scheduler.
+"""Continuous-batching serving: paged KV-cache pool + scheduler.
 
 The bucketed ``Engine`` holds every request of an equal-length batch
 until the WHOLE batch finishes — one long generation stalls the bucket
 and throughput collapses under mixed-length traffic.  The ``Scheduler``
-instead owns a fixed pool of ``max_slots`` decode slots, each with its
-own KV/SSM cache region and per-slot position, and runs ONE jitted
-decode program per step over all slots:
+instead owns a fixed pool of ``max_slots`` decode slots and runs ONE
+jitted decode program per step over all slots.
 
-  * admission — queued requests join as slots free up (admission control
-    against ``max_len`` reuses the Engine's ValueError contract),
-  * prefill — a joining request prefills alone, right-padded to a
-    prompt-length *bucket* (``pad_to_bucket`` idiom: a handful of
-    compiled prefill shapes serve every prompt length), and its cache is
-    written over the slot's region (fully — nothing of the previous
-    occupant survives),
-  * decode — all slots step together with a per-slot position vector and
-    an active-slot mask; requests join and retire without a single
-    re-trace (the decode program compiles exactly once),
-  * retirement — a slot frees on EOS or after ``n_tokens`` and is handed
-    to the next queued request before the next decode step.
+Since the paged-pool PR the cache is no longer a monolithic per-slot
+region but a **paged pool** (vLLM-style): attention K/V lives in shared
+fixed-size pages (``lm.init_paged_pool``), each slot holds a block
+table of page ids, and the decode program reads/writes THROUGH the
+block table (``lm.decode_step_paged``).  SSM state stays per-slot —
+it is O(1) in sequence length, so there is nothing to page.  On top of
+paging:
 
-Throughput is bounded by slot count, not by the slowest request in a
-bucket.  For greedy decoding the served tokens are *token-exact* against
-``Engine.generate`` run per request (tests/test_serve_scheduler.py):
-continuous batching is a scheduling change, not a numerics change.
+  * **shared-prefix reuse** — prompts are hashed at page granularity
+    with a rolling chain (``serve.paging.PagePool``); a new request
+    whose prefix pages are resident refcounts them and prefills only
+    its tail, attending to the reused pages as context
+    (``lm.prefill_paged``).  Retired requests' prefix pages stay cached
+    (refcount 0, still indexed) until allocation pressure evicts them,
+    so reuse works across sequential requests, not just concurrent
+    ones.  Reuse auto-disables when it cannot be token-exact: configs
+    with SSM layers (recurrent state is not per-position shareable) or
+    a lossy ``cache_dtype`` (reused pages would round the context the
+    reference prefill saw at compute precision).
+  * **batched burst prefill** — all requests admitted at one step
+    prefill together in one padded ``(B, bucket)`` program instead of
+    one at a time; programs are keyed by (prompt-tail bucket,
+    power-of-two batch width), keeping the compile budget bounded.
+
+Both are ``Scheduler`` options that default ON; ``paged=False``
+reproduces the previous monolithic per-slot behavior exactly (that
+path still runs ``lm.prefill`` + ``lm.insert_cache_slot``).
+
+Scheduling never changes numerics: for greedy decoding the served
+tokens are *token-exact* against ``Engine.generate`` run per request
+(tests/test_serve_scheduler.py), with paging, prefix reuse and burst
+prefill all enabled.  Admission control raises the shared ``ValueError``
+capacity contract (``serve.check_capacity`` + per-pool
+``paging.check_page_capacity``).  See docs/serving.md for the full
+design.
 """
 from __future__ import annotations
 
@@ -31,7 +48,7 @@ import dataclasses
 import time
 from collections import deque
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +63,7 @@ from .engine import (
     numerics_ctx,
     sample_tokens,
 )
+from .paging import PagePool, check_page_capacity, pages_needed
 
 
 @dataclasses.dataclass
@@ -70,6 +88,7 @@ class RequestResult:
     admitted_step: int
     finished_step: int
     finished_wall_s: float             # seconds since serve() started
+    prefix_hit_tokens: int = 0         # prompt tokens served from cached pages
 
     @property
     def generated(self) -> np.ndarray:
@@ -80,11 +99,15 @@ class RequestResult:
 class ServeStats:
     steps: int                         # scheduler ticks, idle ones included
     decode_steps: int
-    prefills: int
+    prefills: int                      # requests prefilled
     max_slots: int
     generated_tokens: int
     wall_s: float
     occupancy: float                   # mean fraction of slots active per decode step
+    prefill_batches: int = 0           # prefill programs launched (== prefills
+                                       # without burst batching)
+    prefix_reuse_active: bool = False
+    paging: Optional[dict] = None      # PageStats.as_dict() in paged mode
 
 
 class SlotAllocator:
@@ -136,9 +159,10 @@ def default_prefill_buckets(max_len: int) -> List[int]:
 
 def _prefill_fn(params, pool, tokens, valid_len, slot, key, temp, *,
                 cfg: LMConfig, max_len: int):
-    """Jitted once per prompt bucket: prefill one request (right-padded
-    to the bucket), overwrite slot ``slot`` of the pool with its cache,
-    sample its first token at per-request step 0."""
+    """Legacy (paged=False) prefill, jitted once per prompt bucket:
+    prefill one request (right-padded to the bucket), overwrite slot
+    ``slot`` of the monolithic pool with its cache, sample its first
+    token at per-request step 0."""
     caches, logits = lm.prefill(
         params, {"tokens": tokens}, cfg, max_len=max_len, valid_len=valid_len
     )
@@ -151,10 +175,11 @@ def _prefill_fn(params, pool, tokens, valid_len, slot, key, temp, *,
 
 def _decode_fn(params, pool, cur, pos, active, keys, steps, temps, *,
                cfg: LMConfig):
-    """Jitted exactly once: one decode step over ALL slots.  ``pos`` is
-    the per-slot length vector; inactive slots are clamped to position 0
-    so their (discarded) writes stay in bounds, and their sampled token
-    is masked to -1 so host code can never mistake it for output."""
+    """Legacy (paged=False) decode, jitted exactly once: one step over
+    ALL slots.  ``pos`` is the per-slot length vector; inactive slots are
+    clamped to position 0 so their (discarded) writes stay in bounds, and
+    their sampled token is masked to -1 so host code can never mistake it
+    for output."""
     pos_eff = jnp.where(active, pos, 0)
     logits, pool = lm.decode_step(
         params, {"tokens": cur[:, None]}, pos_eff, pool, cfg
@@ -163,13 +188,49 @@ def _decode_fn(params, pool, cur, pos, active, keys, steps, temps, *,
     return pool, jnp.where(active, nxt, -1)
 
 
-class Scheduler:
-    """Continuous-batching engine over a slot-based KV cache pool.
+def _decode_paged_fn(params, pool, cur, pos, active, block_tables, keys,
+                     steps, temps, *, cfg: LMConfig):
+    """Jitted exactly once: one decode step over ALL slots, reading the
+    paged pool through the block tables.  Inactive slots clamp to
+    position 0 AND carry an all-garbage block table row, so their
+    discarded writes land in the reserved garbage page — never in a
+    page another request owns."""
+    pos_eff = jnp.where(active, pos, 0)
+    logits, pool = lm.decode_step_paged(
+        params, {"tokens": cur[:, None]}, pos_eff, pool, block_tables, cfg
+    )
+    nxt = sample_tokens(logits[:, -1], keys, steps, temps)
+    return pool, jnp.where(active, nxt, -1)
 
-    Compiled-program budget across ANY trace: one decode program plus
-    one prefill program per distinct prompt bucket actually used
-    (``compile_counts`` exposes the jit cache sizes so tests assert this
-    instead of eyeballing)."""
+
+def _burst_prefill_fn(params, pool, tokens, block_tables, slots, ctx_len,
+                      tail_valid, keys, temps, *, cfg: LMConfig,
+                      page_size: int, use_context: bool):
+    """Jitted once per (tail bucket, burst width): prefill a whole
+    admission burst into the paged pool and sample each member's first
+    token at per-request step 0.  Padding rows carry tail_valid == 0,
+    the garbage slot and an all-garbage block table; their sampled
+    token is junk the host ignores.  ``use_context`` is False when the
+    scheduler's prefix reuse is gated off — ctx_len is then always 0,
+    and the compiled program skips the context gather entirely."""
+    pool, logits = lm.prefill_paged(
+        params, {"tokens": tokens}, cfg, pool, block_tables, slots,
+        ctx_len, tail_valid, page_size, use_context,
+    )
+    toks = sample_tokens(
+        logits[:, -1], keys, jnp.zeros((tokens.shape[0],), jnp.int32), temps
+    )
+    return pool, toks
+
+
+class Scheduler:
+    """Continuous-batching engine over a paged KV-cache pool.
+
+    Compiled-program budget across ANY trace: one decode program plus —
+    in paged mode — one prefill program per (tail bucket, power-of-two
+    burst width) pair actually used; with ``paged=False`` one prefill
+    program per prompt bucket.  ``compile_counts`` exposes the jit cache
+    sizes so tests assert this instead of eyeballing."""
 
     def __init__(
         self,
@@ -181,6 +242,11 @@ class Scheduler:
         eos_id: Optional[int] = None,
         seed: int = 0,
         dcim_sim=None,
+        paged: bool = True,
+        page_size: int = 16,
+        n_pages: Optional[int] = None,
+        prefix_reuse: bool = True,
+        burst_prefill: bool = True,
     ):
         self.cfg = cfg
         self.params = params
@@ -200,11 +266,47 @@ class Scheduler:
         if max_slots < 1:
             raise ValueError(f"need at least one slot, got {max_slots}")
 
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        self.burst_prefill = bool(burst_prefill) and self.paged
+        if self.paged:
+            if self.max_len % self.page_size:
+                raise ValueError(
+                    f"max_len {self.max_len} must be a multiple of "
+                    f"page_size {self.page_size}"
+                )
+            self.pages_per_slot = self.max_len // self.page_size
+            if n_pages is None:
+                # Every slot can hold a full max_len sequence even with
+                # zero sharing, plus the garbage page.
+                n_pages = self.max_slots * self.pages_per_slot + 1
+            self.n_pages = int(n_pages)
+            if self.n_pages < 2:
+                raise ValueError(f"need >= 2 pages, got {self.n_pages}")
+        else:
+            self.pages_per_slot = 0
+            self.n_pages = 0
+        # Prefix reuse must be token-exact against full recompute:
+        #  * SSM layers carry recurrent state — a page's K/V analogue
+        #    does not exist, and skipping prefix prefill would skip the
+        #    state the tail depends on;
+        #  * a lossy cache dtype would hand the tail prefill ROUNDED
+        #    context where the reference prefill attends compute-dtype
+        #    values.
+        period = cfg.scan_period()
+        has_ssm = any(cfg.mixer_kind(i) == "mamba" for i in range(period))
+        self.prefix_reuse = bool(prefix_reuse) and self.paged
+        self.prefix_reuse_active = (
+            self.prefix_reuse and not has_ssm
+            and cfg.cache_dtype == cfg.compute_dtype
+        )
+
         # The cache pool is donated: serve() always rebinds it to the
         # returned value, and aliasing lets XLA update the biggest
         # buffer of the hot loop in place instead of copying it per step.
-        self._decode = jax.jit(partial(_decode_fn, cfg=cfg), donate_argnums=(1,))
-        self._prefills: Dict[int, "jax.stages.Wrapped"] = {}
+        decode = _decode_paged_fn if self.paged else _decode_fn
+        self._decode = jax.jit(partial(decode, cfg=cfg), donate_argnums=(1,))
+        self._prefills: Dict[Union[int, Tuple[int, int]], "jax.stages.Wrapped"] = {}
         self.last_stats: Optional[ServeStats] = None
 
     # ----------------------------- plumbing ---------------------------------
@@ -219,21 +321,31 @@ class Scheduler:
             f"prompt length {prompt_len} exceeds every bucket"
         )
 
-    def _prefill_jit(self, bucket: int):
-        fn = self._prefills.get(bucket)
+    def _prefill_jit(self, key):
+        """Legacy mode keys by prompt bucket; paged mode by (tail
+        bucket, burst width)."""
+        fn = self._prefills.get(key)
         if fn is None:
-            fn = jax.jit(
-                partial(_prefill_fn, cfg=self.cfg, max_len=self.max_len),
-                donate_argnums=(1,),    # pool rebinding, as in _decode
-            )
-            self._prefills[bucket] = fn
+            if self.paged:
+                fn = jax.jit(
+                    partial(_burst_prefill_fn, cfg=self.cfg,
+                            page_size=self.page_size,
+                            use_context=self.prefix_reuse_active),
+                    donate_argnums=(1,),    # pool rebinding, as in _decode
+                )
+            else:
+                fn = jax.jit(
+                    partial(_prefill_fn, cfg=self.cfg, max_len=self.max_len),
+                    donate_argnums=(1,),
+                )
+            self._prefills[key] = fn
         return fn
 
     def compile_counts(self) -> Dict[str, int]:
         """Jit-cache sizes: the scheduler's whole compiled-program budget."""
         counts = {
             "decode": int(self._decode._cache_size()),
-            "prefill": {b: int(f._cache_size()) for b, f in self._prefills.items()},
+            "prefill": {k: int(f._cache_size()) for k, f in self._prefills.items()},
         }
         counts["total"] = counts["decode"] + sum(counts["prefill"].values())
         return counts
@@ -258,6 +370,10 @@ class Scheduler:
             if r.prompt.size < 1:
                 raise ValueError(f"request {r.rid}: empty prompt")
             check_capacity(r.prompt.size, r.n_tokens, self.max_len)
+            if self.paged:
+                check_page_capacity(
+                    r.prompt.size, r.n_tokens, self.page_size, self.n_pages - 1
+                )
             reqs.append(r)
         rids = [r.rid for r in reqs]
         if len(set(rids)) != len(rids):
@@ -272,7 +388,16 @@ class Scheduler:
         # Arrival order; stable for equal arrival steps.
         queue = deque(sorted(reqs, key=lambda r: r.arrival))
         alloc = SlotAllocator(S)
-        pool = lm.init_cache(self.cfg, S, self.max_len)
+        if self.paged:
+            pool = lm.init_paged_pool(
+                self.cfg, S, self.n_pages, self.page_size
+            )
+            ppool = PagePool(self.n_pages, self.page_size)
+            btables = np.zeros((S, self.pages_per_slot), np.int32)
+        else:
+            pool = lm.init_cache(self.cfg, S, self.max_len)
+            ppool = None
+            btables = None
 
         pos = np.zeros(S, np.int32)
         active = np.zeros(S, bool)
@@ -286,6 +411,7 @@ class Scheduler:
         step = 0
         decode_steps = 0
         prefills = 0
+        prefill_batches = 0
         active_slot_steps = 0
 
         def finish(slot: int) -> None:
@@ -300,13 +426,38 @@ class Scheduler:
                 admitted_step=st["admitted"],
                 finished_step=step,
                 finished_wall_s=time.perf_counter() - t0,
+                prefix_hit_tokens=st.get("prefix_hit_tokens", 0),
             )
+            if self.paged:
+                ppool.release(st["pages"])
+                # An inactive slot's clamped decode write must land in
+                # the garbage page, never in a (possibly reallocated)
+                # page of the retired occupant.
+                btables[slot, :] = 0
             occupant[slot] = None
             active[slot] = False
             alloc.release(slot)
 
-        def admit(req: Request) -> None:
-            nonlocal pool, prefills
+        def seat(slot: int, req: Request, tok0: int, key_r, admitted: int,
+                 pages: List[int], hit_tokens: int) -> None:
+            """Common post-prefill bookkeeping for both modes."""
+            occupant[slot] = {
+                "req": req, "out": [tok0], "remaining": req.n_tokens - 1,
+                "admitted": admitted, "pages": pages,
+                "prefix_hit_tokens": hit_tokens,
+            }
+            pos[slot] = req.prompt.size
+            active[slot] = True
+            cur[slot] = tok0
+            keys[slot] = np.asarray(key_r)
+            steps[slot] = 1
+            temps[slot] = req.temperature
+            if occupant[slot]["remaining"] == 0 or tok0 == self.eos_id:
+                finish(slot)
+
+        # ------------------------- legacy admission --------------------------
+        def admit_legacy(req: Request) -> None:
+            nonlocal pool, prefills, prefill_batches
             slot = alloc.acquire()
             P = req.prompt.size
             bucket = self._bucket_for(P)
@@ -319,35 +470,142 @@ class Scheduler:
                 np.float32(req.temperature),
             )
             prefills += 1
-            tok0 = int(tok0)
-            occupant[slot] = {
-                "req": req, "out": [tok0], "remaining": req.n_tokens - 1,
-                "admitted": step,
+            prefill_batches += 1
+            seat(slot, req, int(tok0), key_r, step, [], 0)
+
+        # ------------------------- paged admission ---------------------------
+        def try_admit_paged(req: Request, pending: Set[int]):
+            """Reserve a slot + pages for ``req``.  Returns an admission
+            dict, None (cannot admit now: no slot / not enough pages),
+            or "conflict" (its prefix pages are pending fill in the
+            current burst group — flush the group first)."""
+            if not alloc.free_count:
+                return None
+            P = req.prompt.size
+            need = pages_needed(P, req.n_tokens, self.page_size)
+            if self.prefix_reuse_active:
+                matched, hashes = ppool.match_prefix(req.prompt)
+                if pending.intersection(matched):
+                    return "conflict"
+            else:
+                matched, hashes = [], []
+            ppool.ref(matched)          # pin before allocation can evict
+            fresh_needed = need - len(matched)
+            if fresh_needed > ppool.available():
+                ppool.unref(matched)    # roll back the pin (and its stats)
+                return None
+            fresh = ppool.allocate(fresh_needed)
+            pages = matched + fresh
+            if self.prefix_reuse_active and len(hashes) > len(matched):
+                ppool.register_prefix(
+                    hashes[len(matched):], pages[len(matched):len(hashes)]
+                )
+            slot = alloc.acquire()
+            btables[slot, :need] = pages
+            btables[slot, need:] = 0
+            ctx = len(matched) * self.page_size
+            return {
+                "req": req, "slot": slot, "pages": pages, "ctx_len": ctx,
+                "tail": req.prompt[ctx:], "fresh": fresh,
             }
-            pos[slot] = P
-            active[slot] = True
-            cur[slot] = tok0
-            keys[slot] = np.asarray(key_r)
-            steps[slot] = 1
-            temps[slot] = req.temperature
-            if occupant[slot]["remaining"] == 0 or tok0 == self.eos_id:
-                finish(slot)
+
+        def run_group(group: List[dict]) -> None:
+            nonlocal pool, prefills, prefill_batches
+            Bg = len(group)
+            Bpad = 1 << (Bg - 1).bit_length()
+            bucket = self._bucket_for(max(len(g["tail"]) for g in group))
+            tokens = np.zeros((Bpad, bucket), np.int32)
+            bt = np.zeros((Bpad, self.pages_per_slot), np.int32)
+            slots_arr = np.full(Bpad, S, np.int32)      # garbage slot default
+            ctx = np.zeros(Bpad, np.int32)
+            tv = np.zeros(Bpad, np.int32)
+            temps_g = np.zeros(Bpad, np.float32)
+            keys_g = np.zeros((Bpad, 2), np.uint32)
+            reqs_keys = derive_request_keys(seed, [g["req"].rid for g in group])
+            for i, g in enumerate(group):
+                T = len(g["tail"])
+                tokens[i, :T] = g["tail"]
+                bt[i] = btables[g["slot"]]
+                slots_arr[i] = g["slot"]
+                ctx[i] = g["ctx_len"]
+                tv[i] = T
+                temps_g[i] = g["req"].temperature
+                keys_g[i] = np.asarray(reqs_keys[i])
+            pool_new, toks = self._prefill_jit((bucket, Bpad))(
+                self.params, pool, jnp.asarray(tokens), jnp.asarray(bt),
+                jnp.asarray(slots_arr), jnp.asarray(ctx), jnp.asarray(tv),
+                jnp.asarray(keys_g), jnp.asarray(temps_g),
+            )
+            pool = pool_new
+            toks = np.asarray(toks)
+            prefills += Bg
+            prefill_batches += 1
+            for i, g in enumerate(group):
+                seat(g["slot"], g["req"], int(toks[i]), reqs_keys[i], step,
+                     g["pages"], g["ctx_len"])
+
+        def admit_all_paged() -> None:
+            """Admit as many queue heads as fit, in arrival order, in
+            burst groups; a group flushes when a member's prefix pages
+            are still pending fill by the group itself (its context
+            gather must see them filled), or when burst batching is
+            disabled."""
+            while queue and queue[0].arrival <= step:
+                group: List[dict] = []
+                pending: Set[int] = set()
+                flush = False
+                while queue and queue[0].arrival <= step and not flush:
+                    adm = try_admit_paged(queue[0], pending)
+                    if adm is None:
+                        break
+                    if adm == "conflict":
+                        flush = True
+                        break
+                    queue.popleft()
+                    group.append(adm)
+                    pending.update(adm["fresh"])
+                    if not self.burst_prefill:
+                        break
+                if not group:
+                    # No admission possible (no slot / not enough pages);
+                    # a "conflict" with an empty group cannot happen —
+                    # pending is empty until a member joins.
+                    return
+                run_group(group)        # may finish slots -> keep admitting
 
         with self._numerics():
             while queue or active.any():
-                while queue and queue[0].arrival <= step and alloc.free_count:
-                    admit(queue.popleft())
+                if self.paged:
+                    admit_all_paged()
+                else:
+                    while (queue and queue[0].arrival <= step
+                           and alloc.free_count):
+                        admit_legacy(queue.popleft())
                 if not active.any():
+                    if queue and queue[0].arrival <= step:
+                        raise RuntimeError(      # pragma: no cover
+                            "admission stalled with an idle pool — "
+                            "page accounting bug"
+                        )
+                    if not queue:
+                        break
                     # Nothing running: jump straight to the next arrival
-                    # (queue is non-empty here, else the loop would have
-                    # ended) instead of ticking through the gap.
+                    # instead of ticking through the gap.
                     step = max(step + 1, queue[0].arrival)
                     continue
-                pool, nxt = self._decode(
-                    self.params, pool, jnp.asarray(cur), jnp.asarray(pos),
-                    jnp.asarray(active), jnp.asarray(keys),
-                    jnp.asarray(steps), jnp.asarray(temps),
-                )
+                if self.paged:
+                    pool, nxt = self._decode(
+                        self.params, pool, jnp.asarray(cur), jnp.asarray(pos),
+                        jnp.asarray(active), jnp.asarray(btables),
+                        jnp.asarray(keys), jnp.asarray(steps),
+                        jnp.asarray(temps),
+                    )
+                else:
+                    pool, nxt = self._decode(
+                        self.params, pool, jnp.asarray(cur), jnp.asarray(pos),
+                        jnp.asarray(active), jnp.asarray(keys),
+                        jnp.asarray(steps), jnp.asarray(temps),
+                    )
                 nxt = np.asarray(nxt)
                 decode_steps += 1
                 active_slot_steps += int(active.sum())
@@ -375,5 +633,8 @@ class Scheduler:
             occupancy=(
                 active_slot_steps / (decode_steps * S) if decode_steps else 0.0
             ),
+            prefill_batches=prefill_batches,
+            prefix_reuse_active=self.prefix_reuse_active,
+            paging=ppool.stats.as_dict() if ppool is not None else None,
         )
         return [results[r.rid] for r in reqs]

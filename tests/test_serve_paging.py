@@ -1,0 +1,311 @@
+"""Paged KV-cache pool: PagePool allocator/refcount/eviction invariants,
+prefix-cache hit/miss accounting on Scheduler stats, the page-capacity
+ValueError contract, and the no-cross-request-leakage regression for
+refcounted pages."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models import lm
+from repro.serve import (
+    Engine,
+    PagePool,
+    Request,
+    Scheduler,
+    check_page_capacity,
+    pages_needed,
+    prefix_page_hashes,
+)
+
+VOCAB = 512
+
+
+def _mk(arch="qwen2.5-3b", cache="float32"):
+    """Smoke config with a LOSSLESS cache dtype so prefix reuse is
+    active (reused pages must hold exactly what the reference prefill
+    attends at compute precision)."""
+    cfg = configs.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, cache_dtype=cache)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _prefix_reqs(rng, n, prefix_len, tail_lens, n_tokens=4, arrivals=None):
+    pre = rng.integers(0, VOCAB, prefix_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, VOCAB, tail_lens[i % len(tail_lens)]).astype(np.int32)
+        reqs.append(Request(
+            prompt=np.concatenate([pre, tail]), n_tokens=n_tokens,
+            arrival=0 if arrivals is None else arrivals[i % len(arrivals)],
+        ))
+    return reqs
+
+
+class TestPagePool:
+    def test_allocate_free_refcount_roundtrip(self):
+        pool = PagePool(n_pages=9, page_size=8)
+        assert pool.usable_pages == 8 and pool.available() == 8
+        pages = pool.allocate(3)
+        assert 0 not in pages                      # garbage page never handed out
+        assert len(set(pages)) == 3
+        assert all(pool.refcount(p) == 1 for p in pages)
+        assert pool.available() == 5
+        pool.release(pages)
+        assert pool.available() == 8               # unindexed pages free instantly
+        with pytest.raises(ValueError):
+            pool.release([pages[0]])               # double release
+
+    def test_exhaustion_is_runtime_error(self):
+        pool = PagePool(n_pages=4, page_size=8)
+        pool.allocate(3)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.allocate(1)
+
+    def test_cached_prefix_pages_hit_after_release_then_evict_lru(self):
+        pool = PagePool(n_pages=6, page_size=4)
+        prompt = np.arange(9, dtype=np.int32)
+        hashes = prefix_page_hashes(prompt, 4)
+        assert len(hashes) == 2                    # pages fully covered by 9 tokens
+        pages = pool.allocate(2)
+        pool.register_prefix(hashes, pages)
+        pool.release(pages)                        # -> CACHED, still hittable
+        got, hs = pool.match_prefix(prompt)
+        assert got == pages and hs == hashes
+        # Allocation pressure evicts LRU cached pages and drops index entries.
+        pool.allocate(5)
+        assert pool.stats.evictions == 2
+        assert pool.match_prefix(prompt)[0] == []
+
+    def test_match_stops_at_first_miss_and_caps_short_of_prompt(self):
+        pool = PagePool(n_pages=8, page_size=4)
+        prompt = np.arange(12, dtype=np.int32)     # 3 fully covered pages
+        hashes = prefix_page_hashes(prompt, 4)
+        assert len(hashes) == 3
+        pages = pool.allocate(2)
+        pool.register_prefix(hashes[:2], pages)
+        # Page-aligned prompt: the match is capped one token short so the
+        # tail prefill is never empty (the last page must be recomputed
+        # to produce first-token logits).
+        got, hs = pool.match_prefix(prompt)
+        assert got == pages and len(hs) == 2
+        # Chain hashing: losing the FIRST page makes the second unreachable.
+        pool.release(pages[:1])
+        pool.allocate(6)      # 5 free + 1 eviction: the cached first page
+        assert pool.stats.evictions == 1
+        assert pool.match_prefix(prompt)[0] == []
+
+    @given(
+        page_size=st.integers(1, 8),
+        plen=st.integers(1, 40),
+        n_tokens=st.integers(1, 40),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_pages_needed_covers_every_written_position(self, page_size, plen, n_tokens):
+        """pages_needed must cover prompt positions [0, P) and decode
+        writes [P, P + n_tokens - 1) — and not a page more."""
+        written = plen + n_tokens - 1
+        need = pages_needed(plen, n_tokens, page_size)
+        assert need * page_size >= written
+        assert (need - 1) * page_size < written
+
+    def test_unref_rolls_back_pin_and_hit_stats(self):
+        """A failed admission unpins its matched pages and reverses the
+        hit counters the ref charged — the pages return to CACHED and
+        remain hittable."""
+        pool = PagePool(n_pages=6, page_size=4)
+        prompt = np.arange(9, dtype=np.int32)
+        pages = pool.allocate(2)
+        pool.register_prefix(prefix_page_hashes(prompt, 4), pages)
+        pool.release(pages)                        # -> CACHED
+        pool.ref(pages)
+        pool.unref(pages)
+        assert pool.stats.prefix_hits == 0
+        assert pool.stats.prefix_hit_tokens == 0
+        assert all(pool.refcount(p) == 0 for p in pages)
+        assert pool.match_prefix(prompt)[0] == pages
+
+    def test_chain_hashes_disambiguate_equal_pages(self):
+        """Two prompts sharing page 1 CONTENT but not page 0 must not
+        collide: a chain hash names the whole prefix."""
+        a = np.concatenate([np.zeros(4, np.int32), np.ones(4, np.int32)])
+        b = np.concatenate([np.full(4, 7, np.int32), np.ones(4, np.int32)])
+        ha, hb = prefix_page_hashes(a, 4), prefix_page_hashes(b, 4)
+        assert ha[0] != hb[0] and ha[1] != hb[1]
+
+
+class TestCapacityContract:
+    def test_check_page_capacity_value_error(self):
+        with pytest.raises(ValueError) as ei:
+            check_page_capacity(prompt_len=30, n_tokens=8, page_size=8,
+                                usable_pages=4)
+        msg = str(ei.value)
+        assert "30" in msg and "8" in msg and "page" in msg
+        check_page_capacity(30, 3, 8, 4)           # 4 pages cover 32 positions
+
+    def test_scheduler_rejects_oversize_for_pool_not_just_max_len(self):
+        """A request that fits max_len but not the page pool raises the
+        same ValueError capacity contract as serve.check_capacity."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8,
+                          n_pages=4)               # 3 usable pages = 24 positions
+        rng = np.random.default_rng(0)
+        bad = Request(prompt=rng.integers(0, VOCAB, 20).astype(np.int32),
+                      n_tokens=8)
+        with pytest.raises(ValueError, match="page-pool capacity"):
+            sched.serve([bad])
+        ok = Request(prompt=bad.prompt[:20], n_tokens=5)   # 24 positions fit
+        res = sched.serve([ok])[0]
+        assert res.tokens.size == 25
+
+    def test_transient_exhaustion_queues_instead_of_raising(self):
+        """Enough pages for each request alone but not both at once:
+        the second request waits for the first's retirement (no error,
+        both served, tokens exact)."""
+        cfg, params = _mk()
+        eng = Engine(cfg, params, max_len=32)
+        sched = Scheduler(cfg, params, max_slots=2, max_len=32, page_size=8,
+                          n_pages=4, prefix_reuse=False)   # 3 usable pages
+        rng = np.random.default_rng(1)
+        reqs = [Request(prompt=rng.integers(0, VOCAB, 12).astype(np.int32),
+                        n_tokens=5) for _ in range(2)]     # 2 pages each
+        results = sched.serve(reqs)
+        for req, res in zip(reqs, results):
+            ref = eng.generate(req.prompt[None], n_tokens=5,
+                               request_ids=[res.rid])
+            np.testing.assert_array_equal(ref.tokens[0], res.tokens)
+        assert results[1].admitted_step > results[0].admitted_step
+
+
+class TestPrefixAccounting:
+    def test_hit_miss_counters_on_scheduler_stats(self):
+        """16 requests over one 16-token system prefix, page_size 8: the
+        first admission fills the 2 prefix pages (misses), every later
+        one reuses them (hits), including after retirements (cached
+        pages)."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        rng = np.random.default_rng(2)
+        reqs = _prefix_reqs(rng, 8, prefix_len=16, tail_lens=[2, 3, 5])
+        results = sched.serve(reqs)
+        stats = sched.last_stats
+        assert stats.prefix_reuse_active
+        pg = stats.paging
+        assert pg["prefix_hits"] == 14              # 7 later requests x 2 pages
+        assert pg["prefix_hit_tokens"] == 14 * 8
+        assert pg["prefix_misses"] >= 2             # first fill of the prefix
+        assert pg["evictions"] == 0
+        assert pg["peak_pages_in_use"] <= pg["n_pages"]
+        hits = [r.prefix_hit_tokens for r in results]
+        assert hits[0] == 0 and all(h == 16 for h in hits[1:])
+
+    def test_prefix_reuse_is_token_exact_and_flag_gates_it(self):
+        cfg, params = _mk()
+        rng = np.random.default_rng(3)
+        reqs = _prefix_reqs(rng, 6, prefix_len=24, tail_lens=[2, 4])
+        on = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        off = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8,
+                        prefix_reuse=False)
+        r_on, r_off = on.serve(reqs), off.serve(reqs)
+        for a, b in zip(r_on, r_off):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        assert on.last_stats.paging["prefix_hits"] > 0
+        assert off.last_stats.paging["prefix_hits"] == 0
+        assert not off.last_stats.prefix_reuse_active
+
+    def test_identical_prompts_in_one_burst_split_then_hit(self):
+        """Two identical prompts arriving at the same step: the second's
+        prefix pages are pending fill by the first's burst, so the burst
+        SPLITS (two prefill programs) and the second request still hits
+        the just-filled pages — exactly, and with no self-read of
+        unfilled pages."""
+        cfg, params = _mk()
+        eng = Engine(cfg, params, max_len=64)
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        rng = np.random.default_rng(4)
+        p = rng.integers(0, VOCAB, 20).astype(np.int32)
+        reqs = [Request(prompt=p, n_tokens=6, rid=i) for i in range(2)]
+        results = sched.serve(reqs)
+        for req, res in zip(reqs, results):
+            ref = eng.generate(req.prompt[None], n_tokens=6,
+                               request_ids=[res.rid])
+            np.testing.assert_array_equal(ref.tokens[0], res.tokens)
+        assert sched.last_stats.prefill_batches == 2
+        assert results[1].prefix_hit_tokens == 16   # 2 of its pages reused
+
+
+class TestNoCrossRequestLeakage:
+    def test_recycled_pages_never_readable_by_later_tenant(self):
+        """Regression: a retired request's pages are reallocated to later
+        tenants, but masked reads + garbage-page writes mean the probe's
+        tokens are identical to serving it into a never-used pool — for
+        every slot/page placement a warm-up tenant can force."""
+        cfg, params = _mk()
+        rng = np.random.default_rng(5)
+        probe = Request(prompt=rng.integers(0, VOCAB, 13).astype(np.int32),
+                        n_tokens=6)
+        alone = Scheduler(cfg, params, max_slots=1, max_len=64,
+                          page_size=8).serve(
+            [dataclasses.replace(probe, rid=9)]
+        )[0]
+        for warm_len in (5, 23, 37):   # different page footprints
+            warm = Request(
+                prompt=rng.integers(0, VOCAB, warm_len).astype(np.int32),
+                n_tokens=9,
+            )
+            sched = Scheduler(cfg, params, max_slots=1, max_len=64,
+                              page_size=8)
+            _, again = sched.serve([warm, dataclasses.replace(probe, rid=9)])
+            np.testing.assert_array_equal(alone.tokens, again.tokens)
+
+    def test_refcounted_shared_pages_survive_one_tenants_retirement(self):
+        """Two prefix-sharing requests with different lifetimes: the
+        short one retires (dropping its refs) while the long one still
+        decodes THROUGH the shared pages — and a third request admitted
+        into the freed slot reuses them too.  All tokens exact."""
+        cfg, params = _mk()
+        eng = Engine(cfg, params, max_len=64)
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        rng = np.random.default_rng(6)
+        pre = rng.integers(0, VOCAB, 16).astype(np.int32)
+        mk = lambda tail, n: Request(
+            prompt=np.concatenate([pre, np.asarray(tail, np.int32)]), n_tokens=n
+        )
+        reqs = [mk([1, 2], 2), mk([3, 4, 5], 12), mk([6], 4)]
+        for req, res in zip(reqs, sched.serve(reqs)):
+            ref = eng.generate(req.prompt[None], n_tokens=req.n_tokens,
+                               request_ids=[res.rid])
+            np.testing.assert_array_equal(ref.tokens[0], res.tokens)
+        assert sched.last_stats.paging["prefix_hits"] >= 4
+
+    def test_poisoned_free_pages_do_not_change_output(self):
+        """Belt and braces for the masking argument: serve through a pool
+        whose every page was poisoned with huge values first — if any
+        unwritten/foreign row were ever readable, attention over 1e9
+        keys would derail the tokens."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=32, page_size=8)
+        rng = np.random.default_rng(7)
+        reqs = [Request(prompt=rng.integers(0, VOCAB, p).astype(np.int32),
+                        n_tokens=4, rid=i) for i, p in enumerate([5, 9])]
+        clean = sched.serve(reqs)
+
+        poisoned = Scheduler(cfg, params, max_slots=2, max_len=32, page_size=8)
+        real_init = lm.init_paged_pool
+
+        def poisoned_init(cfg_, n_slots, n_pages, page_size):
+            import jax.numpy as jnp
+            pool = real_init(cfg_, n_slots, n_pages, page_size)
+            return jax.tree.map(lambda a: jnp.full_like(a, 1e9), pool)
+
+        lm.init_paged_pool = poisoned_init
+        try:
+            dirty = poisoned.serve(reqs)
+        finally:
+            lm.init_paged_pool = real_init
+        for c, d in zip(clean, dirty):
+            np.testing.assert_array_equal(c.tokens, d.tokens)

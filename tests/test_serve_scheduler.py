@@ -1,6 +1,8 @@
 """Continuous-batching scheduler: token-exactness against the bucketed
-Engine, slot allocator / bucketing properties, EOS + slot-recycling
-invariants, per-request PRNG reproducibility, bounded compile counts."""
+Engine (through BOTH the paged pool and the legacy monolithic cache),
+slot allocator / bucketing properties, EOS + slot-recycling invariants,
+per-request PRNG reproducibility, bounded compile counts.  Prefix-cache
+accounting and page-pool invariants live in tests/test_serve_paging.py."""
 import dataclasses
 
 import jax
@@ -40,13 +42,16 @@ def _trace(rng, n, plens, ntoks, arrivals=None):
     return reqs
 
 
-@pytest.fixture(scope="module")
-def served16():
+@pytest.fixture(scope="module", params=["paged", "legacy"])
+def served16(request):
     """One mixed-length 16-request trace (interleaved arrivals, mixed
     n_tokens) served through a 3-slot scheduler; shared by the
-    token-exactness and compile-count tests."""
+    token-exactness and compile-count tests.  Runs once through the
+    paged pool (burst prefill on) and once through the legacy monolithic
+    per-slot path (paged=False) — both must serve identical tokens."""
     cfg, params = _mk()
-    sched = Scheduler(cfg, params, max_slots=3, max_len=64)
+    sched = Scheduler(cfg, params, max_slots=3, max_len=64,
+                      paged=request.param == "paged", page_size=16)
     rng = np.random.default_rng(0)
     reqs = _trace(
         rng, 16,
@@ -81,37 +86,73 @@ class TestTokenExactness:
     @pytest.mark.parametrize("arch", ["jamba-v0.1-52b", "deepseek-v3-671b"])
     def test_greedy_exact_hybrid_and_mla_moe(self, arch):
         """SSM state hand-off, MLA compressed caches and (drop-free)
-        MoE routing all survive slotting + bucketed prefill."""
+        MoE routing all survive paging + burst prefill + prefix reuse.
+        The trace includes shared-prefix requests and a lossless cache
+        dtype, so prefix reuse actually hits for deepseek (paged MLA
+        context reconstruction), while jamba exercises the automatic
+        SSM gate (reuse off, paging + bursts still on)."""
         cfg, params = _mk(arch)
+        cfg = dataclasses.replace(cfg, cache_dtype="float32")
+        params = lm.init(jax.random.PRNGKey(0), cfg)
         eng = Engine(cfg, params, max_len=32)
-        sched = Scheduler(cfg, params, max_slots=2, max_len=32)
+        sched = Scheduler(cfg, params, max_slots=2, max_len=32, page_size=8)
         rng = np.random.default_rng(1)
         reqs = _trace(rng, 4, plens=[3, 6, 9], ntoks=[3, 5])
+        pre = rng.integers(0, VOCAB, 17).astype(np.int32)
+        for t in ([1, 2, 3], [4, 5]):
+            reqs.append(Request(
+                prompt=np.concatenate([pre, np.asarray(t, np.int32)]),
+                n_tokens=4,
+            ))
         for req, res in zip(reqs, sched.serve(reqs)):
             ref = eng.generate(
                 req.prompt[None], n_tokens=req.n_tokens, request_ids=[res.rid]
             )
             np.testing.assert_array_equal(ref.tokens[0], res.tokens)
+        stats = sched.last_stats
+        if arch == "deepseek-v3-671b":
+            assert stats.prefix_reuse_active
+            assert stats.paging["prefix_hits"] > 0
+        else:
+            assert not stats.prefix_reuse_active   # SSM layers gate reuse off
+            assert stats.paging["prefix_hits"] == 0
+        assert stats.prefill_batches < stats.prefills   # bursts actually batched
 
 
 class TestCompileBudget:
     def test_bounded_compiles_for_mixed_trace(self, served16):
         """Across the whole 16-request mixed-length trace: ONE decode
-        program and one prefill program per prompt bucket used — asserted
-        from the jit cache sizes, not by inspection."""
+        program, and one prefill program per prompt bucket (legacy) or
+        per (tail bucket, power-of-two burst width) pair (paged) —
+        asserted from the jit cache sizes, not by inspection."""
         _, _, sched, reqs, _ = served16
         counts = sched.compile_counts()
         assert counts["decode"] == 1
-        used_buckets = {sched._bucket_for(r.prompt.size) for r in reqs}
-        assert set(counts["prefill"]) == used_buckets
         assert all(n == 1 for n in counts["prefill"].values())
-        assert counts["total"] <= 1 + len(sched.prefill_buckets)
+        if sched.paged:
+            widths = {1 << w for w in range((sched.max_slots - 1).bit_length() + 1)}
+            assert all(
+                b in sched.prefill_buckets and bw in widths
+                for b, bw in counts["prefill"]
+            )
+            assert counts["total"] <= 1 + len(sched.prefill_buckets) * len(widths)
+        else:
+            used_buckets = {sched._bucket_for(r.prompt.size) for r in reqs}
+            assert set(counts["prefill"]) == used_buckets
+            assert counts["total"] <= 1 + len(sched.prefill_buckets)
 
     def test_second_trace_compiles_nothing_new(self, served16):
+        """Legacy: any trace re-uses the per-bucket programs.  Paged:
+        re-serving the SAME trace (same buckets, same burst widths)
+        compiles nothing — the program cache is keyed only by padded
+        shapes, never by trace content."""
         _, _, sched, reqs, _ = served16
         before = sched.compile_counts()["total"]
-        rng = np.random.default_rng(5)
-        sched.serve(_trace(rng, 4, plens=[4, 9, 14], ntoks=[2, 4]))
+        if sched.paged:
+            sched.serve(reqs)
+        else:
+            rng = np.random.default_rng(5)
+            sched.serve(_trace(rng, 4, plens=[4, 9, 14], ntoks=[2, 4]))
         assert sched.compile_counts()["total"] == before
 
 
