@@ -21,6 +21,13 @@ harnesses produce) twice: through the paged scheduler with prefix reuse
 turns the repeated prefix prefill into page refcounting, so useful
 tokens/s rises with the shared fraction; tokens must stay identical.
 
+A fourth child, ``session``, measures the PERSISTENT-SESSION win: the
+same shared-prefix trace served twice through ONE scheduler, whose
+``ServeSession`` keeps the device pool and prefix cache alive between
+``serve()`` calls.  Trace 2 must record cross-trace prefix hits (its
+FIRST request — the cold miss of a per-trace pool — now hits the pages
+trace 1 filled), compile nothing new, and serve identical tokens.
+
 Reports useful tokens/s (only the tokens each request asked for count)
 and p50/p99 request completion latency, cold (first trace, compiles
 included) and warm (second trace).  Paths must produce IDENTICAL greedy
@@ -174,6 +181,34 @@ def _serve_prefix(cfg, params, prompts, ntoks, max_len):
     return out
 
 
+def _serve_session(cfg, params, prompts, ntoks, max_len):
+    """The warm-session trace: the SAME shared-prefix trace through one
+    persistent session, twice.  Trace 1 fills the prefix pages (compiles
+    included); trace 2 hits them cross-trace — no pool rebuild, no new
+    compiles, identical tokens."""
+    from repro.serve import Request, Scheduler
+
+    sched = Scheduler(cfg, params, max_slots=4, max_len=max_len, page_size=8)
+    reqs = [Request(prompt=p, n_tokens=n) for p, n in zip(prompts, ntoks)]
+
+    def run():
+        t0 = time.perf_counter()
+        results = sched.serve(reqs)
+        wall = time.perf_counter() - t0
+        toks = {r.rid: r.generated for r in results}
+        stats = sched.last_stats
+        return {
+            "wall": wall, "toks": toks,
+            "lat": [r.finished_wall_s for r in results],
+            "prefix_hit_tokens": stats.paging["prefix_hit_tokens"],
+            "cross_trace_hit_tokens": stats.paging["cross_trace_hit_tokens"],
+            "prefix_misses": stats.paging["prefix_misses"],
+            "compiled_programs": sched.compile_counts()["total"],
+        }
+
+    return run(), run()
+
+
 def _serve_bucketed(cfg, params, prompts, ntoks, max_len):
     from repro.serve import Engine, bucket_requests
 
@@ -215,6 +250,35 @@ def run_one(path: str, smoke: bool) -> None:
     import jax
 
     from repro.models import lm
+
+    if path == "session":
+        cfg, prompts, ntoks, max_len, prefix_len = _prefix_trace(smoke)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        useful = sum(ntoks)
+        t1, t2 = _serve_session(cfg, params, prompts, ntoks, max_len)
+        rec = {
+            "path": "session",
+            "n_requests": len(prompts),
+            "shared_prefix_tokens": int(prefix_len),
+            "useful_tokens": useful,
+            "tokens_identical": _digest(t1["toks"]) == _digest(t2["toks"]),
+            "compiles_unchanged": (
+                t1["compiled_programs"] == t2["compiled_programs"]
+            ),
+            "warm_speedup": round(t1["wall"] / max(t2["wall"], 1e-9), 2),
+        }
+        for tag, t in (("trace1", t1), ("trace2", t2)):
+            rec[tag] = {
+                "wall_s": round(t["wall"], 3),
+                "tokens_per_s": round(useful / max(t["wall"], 1e-9), 2),
+                "latency": _percentiles(t["lat"]),
+                "prefix_hit_tokens": t["prefix_hit_tokens"],
+                "cross_trace_hit_tokens": t["cross_trace_hit_tokens"],
+                "prefix_misses": t["prefix_misses"],
+                "compiled_programs": t["compiled_programs"],
+            }
+        print(json.dumps(rec))
+        return
 
     if path == "prefix":
         cfg, prompts, ntoks, max_len, prefix_len = _prefix_trace(smoke)
@@ -273,7 +337,8 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized trace (16 requests, short generations)")
     ap.add_argument("--out-root", default=str(REPO_ROOT))
-    ap.add_argument("--run-one", choices=["continuous", "bucketed", "prefix"],
+    ap.add_argument("--run-one",
+                    choices=["continuous", "bucketed", "prefix", "session"],
                     help=argparse.SUPPRESS)  # child-process mode
     args = ap.parse_args()
 
@@ -287,6 +352,7 @@ def main() -> int:
     cont = _spawn("continuous", args.smoke)
     buck = _spawn("bucketed", args.smoke)
     pref = _spawn("prefix", args.smoke)
+    sess = _spawn("session", args.smoke)
     _, prompts, _ = _trace(args.smoke)
 
     rec = {
@@ -298,6 +364,7 @@ def main() -> int:
         "continuous": cont,
         "bucketed": buck,
         "prefix_trace": pref,
+        "warm_session": sess,
         "warm_speedup": round(
             cont["warm_tokens_per_s"] / max(buck["warm_tokens_per_s"], 1e-9), 2
         ),
@@ -328,11 +395,28 @@ def main() -> int:
         f"hit_tokens={pref['reuse']['prefix_hit_tokens']} "
         f"tokens_identical={pref['tokens_identical']}"
     )
+    print(
+        f"warm session: trace2={sess['trace2']['tokens_per_s']} tok/s vs "
+        f"trace1={sess['trace1']['tokens_per_s']} tok/s "
+        f"({sess['warm_speedup']}x) "
+        f"cross_trace_hit_tokens={sess['trace2']['cross_trace_hit_tokens']} "
+        f"compiles_unchanged={sess['compiles_unchanged']} "
+        f"tokens_identical={sess['tokens_identical']}"
+    )
     if not rec["tokens_identical"]:
         print("ERROR: continuous and bucketed paths served different tokens")
         return 1
     if not pref["tokens_identical"]:
         print("ERROR: prefix reuse changed the served tokens")
+        return 1
+    if not sess["tokens_identical"]:
+        print("ERROR: session persistence changed the served tokens")
+        return 1
+    if sess["trace2"]["cross_trace_hit_tokens"] <= 0:
+        print("ERROR: warm-session trace recorded no cross-trace prefix hits")
+        return 1
+    if not sess["compiles_unchanged"]:
+        print("ERROR: the warm-session trace compiled new programs")
         return 1
     if rec["warm_speedup"] <= 1.0:
         print("WARNING: continuous batching did not beat the bucketed path")

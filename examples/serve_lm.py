@@ -1,6 +1,7 @@
 """Serving example: the bucketed Engine vs the continuous-batching
-Scheduler on the same mixed-length request set, plus shared-prefix
-reuse over the paged KV-cache pool.
+Scheduler on the same mixed-length request set, shared-prefix reuse
+over the paged KV-cache pool, a warm persistent session (two traces,
+one device pool — cross-trace prefix hits), and streaming delivery.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -70,6 +71,37 @@ def main():
     print(f"  page hits={pg['prefix_hits']} misses={pg['prefix_misses']} "
           f"hit_tokens={pg['prefix_hit_tokens']} "
           f"peak_pages={pg['peak_pages_in_use']}/{pg['n_pages']}")
+
+    print("\n-- warm session: a second trace over the same system prompt --")
+    # The scheduler's persistent ServeSession keeps the device pool and
+    # the prefix index alive between serve() calls, so trace 2's very
+    # first request hits the pages trace 1 filled (cross-trace hits).
+    reqs2 = [
+        Request(prompt=np.concatenate(
+            [system, rng.integers(0, cfg.vocab_size, t).astype(np.int32)]
+        ), n_tokens=6, rid=100 + i)
+        for i, t in enumerate((3, 2, 4))
+    ]
+    before = sched.compile_counts()["total"]
+    results = sched.serve(reqs2)
+    s = sched.last_stats
+    pg = s.paging
+    print(f"  trace {s.trace_index}: first request hit "
+          f"{results[0].prefix_hit_tokens} prompt tokens warm; "
+          f"cross_trace_hit_tokens={pg['cross_trace_hit_tokens']} "
+          f"misses={pg['prefix_misses']}")
+    print(f"  compiled programs: {before} -> "
+          f"{sched.compile_counts()['total']} (warm trace compiles nothing)")
+    print(f"  persistent pool: {s.pool_bytes / 1024:.0f} KiB")
+
+    print("\n-- streaming: tokens observable as they are produced --")
+    handle = sched.submit(
+        Request(prompt=system[:12], n_tokens=8, rid=200),
+        on_token=lambda h, t: print(f"  step token: rid={h.rid} tok={t}"),
+    )
+    streamed = list(handle.stream())     # drains while the session steps
+    print(f"  stream() got {streamed}; done={handle.done} "
+          f"(== result: {list(handle.result.generated) == streamed})")
 
 
 if __name__ == "__main__":

@@ -1,14 +1,25 @@
 #!/usr/bin/env bash
 # Local equivalent of .github/workflows/ci.yml: the tier-1 test command,
-# perf record regeneration (BENCH_dse.json / BENCH_serve.json), a
-# single-cell dry-run through the results store, and the docs-snippet
-# check (every python block in README/docs must execute).
+# perf record regeneration (BENCH_dse.json / BENCH_serve.json — the
+# latter now includes the warm-session trace), two single-cell dry-runs
+# through the results store (the 2x16x16 train cell asserts the SPMD
+# partitioner emits no involuntary-rematerialization warnings), and the
+# docs-snippet check (every python block in README/docs must execute).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m pytest -x -q -m "not slow" "$@"
+# The persistent-session / streaming module already ran inside the full
+# sweep above; when extra args filtered that sweep, run it explicitly so
+# no invocation can skip it.
+if [ "$#" -gt 0 ]; then
+  python -m pytest -x -q -m "not slow" tests/test_serve_session.py
+fi
 PYTHONPATH=src python -m benchmarks.bench_dse --smoke
 PYTHONPATH=src python -m benchmarks.bench_serve --smoke
 PYTHONPATH=src python -m repro.launch.dryrun \
   --arch qwen2.5-3b --shape decode_32k --mesh single \
-  --out results/dryrun-ci --force
+  --out results/dryrun-ci --force --fail-on-remat
+PYTHONPATH=src python -m repro.launch.dryrun \
+  --arch qwen2.5-3b --shape train_4k --mesh multi \
+  --out results/dryrun-ci --force --fail-on-remat
 python scripts/check_docs.py

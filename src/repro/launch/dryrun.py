@@ -17,8 +17,11 @@ Usage:
 """
 # (no __future__ import: the XLA_FLAGS lines must be the first statements)
 import argparse
+import contextlib
 import pathlib
 import re
+import sys
+import tempfile
 import time
 import traceback
 from functools import partial
@@ -286,6 +289,36 @@ def analyze_compiled(lowered, compiled, hlo_path: Optional[pathlib.Path] = None)
 
 
 # ----------------------------- runner -------------------------------------------
+REMAT_WARNING = "Involuntary full rematerialization"
+
+
+@contextlib.contextmanager
+def _capture_fd_stderr(sink: Dict[str, str]):
+    """Capture OS-level stderr around a block (XLA's C++ logging writes
+    to fd 2 directly, bypassing ``sys.stderr``) and re-emit it
+    afterwards, so compile-time partitioner warnings — notably the
+    "Involuntary full rematerialization" copies a missing sharding
+    annotation forces — become assertable data instead of scroll-by."""
+    fd_saved = os.dup(2)
+    with tempfile.TemporaryFile(mode="w+b") as tmp:
+        sys.stderr.flush()
+        os.dup2(tmp.fileno(), 2)
+        try:
+            yield
+        finally:
+            sys.stderr.flush()
+            os.dup2(fd_saved, 2)
+            os.close(fd_saved)
+            tmp.seek(0)
+            sink["text"] = tmp.read().decode("utf-8", "replace")
+            # Re-emit INSIDE the finally so a failing compile still gets
+            # its XLA diagnostics into the real stderr — the error case
+            # is exactly when they matter.
+            if sink["text"]:
+                sys.stderr.write(sink["text"])
+                sys.stderr.flush()
+
+
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: pathlib.Path, force: bool = False,
              overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -313,7 +346,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["overrides"] = dict(overrides)
     t_cell = time.time()
     try:
-        with shd.use_mesh(mesh):
+        captured: Dict[str, str] = {"text": ""}
+        with shd.use_mesh(mesh), _capture_fd_stderr(captured):
             t0 = time.time()
             if shape.kind == "train":
                 fn, args = build_train_cell(cfg, shape, mesh)
@@ -325,6 +359,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t1 = time.time()
             compiled = lowered.compile()
             t2 = time.time()
+        rec["remat_warnings"] = captured["text"].count(REMAT_WARNING)
         rec.update(
             analyze_compiled(
                 lowered, compiled,
@@ -344,6 +379,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["status"] = "error"
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-4000:]
+        rec["remat_warnings"] = captured["text"].count(REMAT_WARNING)
+        if captured["text"]:
+            rec["stderr_tail"] = captured["text"][-4000:]
         print(f"[{arch} x {shape_name} x {mesh_tag}] FAILED: {rec['error']}")
     store.put(name, rec, kind="dryrun", wall_s=time.time() - t_cell)
     return rec
@@ -356,6 +394,10 @@ def main():
     ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--fail-on-remat", action="store_true",
+                    help="exit nonzero if any cell compiled with XLA "
+                         "'Involuntary full rematerialization' warnings "
+                         "(missing/contradictory sharding annotations)")
     ap.add_argument("--set", action="append", default=[],
                     help="config override key=value (e.g. ssm_impl=pallas)")
     args = ap.parse_args()
@@ -378,7 +420,7 @@ def main():
     archs = [args.arch] if args.arch else configs.ARCH_NAMES
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
 
-    n_ok = n_fail = n_skip = 0
+    n_ok = n_fail = n_skip = n_remat = 0
     for arch in archs:
         shapes = [args.shape] if args.shape else list(configs.SHAPES)
         for shape_name in shapes:
@@ -389,7 +431,17 @@ def main():
                 n_ok += s == "ok"
                 n_fail += s == "error"
                 n_skip += s.startswith("skipped")
-    print(f"dry-run summary: ok={n_ok} failed={n_fail} skipped={n_skip}")
+                w = rec.get("remat_warnings", 0)
+                if w:
+                    n_remat += w
+                    print(f"[{rec['arch']} x {rec['shape']} x {rec['mesh']}] "
+                          f"{w} involuntary-rematerialization warning(s)")
+    print(f"dry-run summary: ok={n_ok} failed={n_fail} skipped={n_skip} "
+          f"remat_warnings={n_remat}")
+    if args.fail_on_remat and n_remat:
+        print("FAIL: involuntary full rematerializations — enrich the "
+              "sharding annotations (see ROADMAP dry-run notes)")
+        return 1
     return 0 if n_fail == 0 else 1
 
 

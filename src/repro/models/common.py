@@ -219,7 +219,15 @@ def softmax_xent_chunked(
 
 
 def _xent(logits, targets, mask, reduce: bool = True):
-    logits = logits.astype(jnp.float32)
+    # Pin the (..., V) logits (and, through the transpose rule of
+    # with_sharding_constraint, their cotangent) to the vocab-sharded
+    # layout the unembedding produces.  Without the annotation the SPMD
+    # partitioner has to invent a sharding for the logits cotangent
+    # inside the transposed loss-chunk scan and falls back to an
+    # "involuntary full rematerialization" copy of the full (B, C, V)
+    # tensor on the 2x16x16 production mesh.
+    logits = shard_act(logits.astype(jnp.float32),
+                       ("batch",) + (None,) * (logits.ndim - 2) + ("vocab",))
     logz = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
     nll = logz - gold

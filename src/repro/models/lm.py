@@ -6,6 +6,9 @@ Serving caches come in two layouts: monolithic per-slot regions
 and the paged pool (``init_paged_pool`` / ``prefill_paged`` /
 ``decode_step_paged``) where attention K/V lives in shared refcounted
 pages addressed through per-slot block tables — see docs/serving.md.
+Either pool is allocated ONCE per ``serve.ServeSession`` and reused
+across traces (every compiled program donates and rebinds it);
+``pool_nbytes`` reports the persistent footprint.
 
 Layers are scanned in groups of ``cfg.scan_period()`` (1 for uniform
 stacks; 8 for Jamba's 1-attn:7-mamba interleave) so the HLO stays small
@@ -517,6 +520,19 @@ def prefill_paged(params, batch, cfg: LMConfig, pool, block_tables, slots,
     h = norm_apply(params["ln_f"], x, cfg.norm)
     logits = _head_logits(params, last_valid_hidden(h, tail_valid), cfg)
     return new_pool, logits
+
+
+def pool_nbytes(pool) -> int:
+    """Device footprint of a cache pool (paged or monolithic) in bytes.
+
+    The pool is the biggest long-lived buffer of the serving stack;
+    since ``serve.ServeSession`` allocates it exactly once per session
+    (it used to be rebuilt per trace) the session reports this number
+    through ``ServeStats.pool_bytes`` so capacity planning can see what
+    persists across traces."""
+    return int(sum(
+        leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(pool)
+    ))
 
 
 def insert_cache_slot(pool, row_caches, slot):

@@ -3,6 +3,7 @@ from .engine import (  # noqa: F401
     GenerationResult,
     bucket_requests,
     check_capacity,
+    check_unique_rids,
     derive_request_keys,
     sample_tokens,
 )
@@ -17,7 +18,9 @@ from .scheduler import (  # noqa: F401
     Request,
     RequestResult,
     Scheduler,
+    ServeSession,
     ServeStats,
     SlotAllocator,
+    StreamHandle,
     default_prefill_buckets,
 )

@@ -54,6 +54,19 @@ def check_capacity(prompt_len: int, n_tokens: int, max_len: int) -> None:
         )
 
 
+def check_unique_rids(request_ids) -> None:
+    """Admission-contract sibling of :func:`check_capacity`, shared by
+    the batch ``serve()`` path and per-request session submission:
+    results are keyed — and PRNG streams derived — by rid, so two
+    requests sharing an id would silently overwrite each other's output
+    and sample from the same stream.  A real ``ValueError``, not an
+    assert."""
+    rids = list(request_ids)
+    if len(set(rids)) != len(rids):
+        dup = sorted({r for r in rids if rids.count(r) > 1})
+        raise ValueError(f"duplicate request ids {dup}")
+
+
 def derive_request_keys(seed: int, request_ids) -> jnp.ndarray:
     """Per-request PRNG base keys: ``fold_in(PRNGKey(seed), rid)``.
 

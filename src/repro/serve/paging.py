@@ -23,6 +23,16 @@ dumb array of pages; every policy decision lives here, on the host:
   private.  The match is additionally capped one token short of the full
   prompt so every admitted request prefills at least its last token
   (the logits source for its first sampled token).
+* **chain cleanup** — the index remembers each hash's parent/children;
+  evicting a page drops its (chain-unreachable) descendants too: cached
+  orphans go straight back to the free list, live orphans lose their
+  index entry and free like private pages at retirement.  Without this,
+  a ``ServeSession``'s pool — which persists across traces — would
+  slowly fill its LRU with unreachable pages.
+* **trace accounting** — a persistent session calls ``begin_trace()``
+  at each trace boundary; a prefix hit on a page filled by an EARLIER
+  trace counts as a *cross-trace* hit (``PageStats.cross_trace_hits``),
+  the warm-session signal surfaced through ``ServeStats``.
 
 ``check_page_capacity`` is the page-pool half of the admission contract:
 like :func:`repro.serve.engine.check_capacity` it raises ``ValueError``
@@ -36,7 +46,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 from collections import OrderedDict
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -82,18 +92,48 @@ def prefix_page_hashes(prompt: np.ndarray, page_size: int) -> List[str]:
 
 @dataclasses.dataclass
 class PageStats:
-    """Counters exposed through ``Scheduler.last_stats``."""
+    """Counters exposed through ``Scheduler.last_stats``.
+
+    ``prefix_hits`` counts every page served from the index;
+    ``cross_trace_hits`` is the subset whose page was *filled by an
+    earlier trace* of the same session (see ``PagePool.begin_trace``) —
+    the warm-session signal a persistent ``ServeSession`` exists to
+    produce.  Counters are cumulative over the pool's lifetime; per-trace
+    views are diffs of two snapshots (``PageStats.delta``)."""
     n_pages: int = 0                  # usable pages (garbage excluded)
     page_size: int = 0
     prefix_hits: int = 0              # pages reused via the prefix index
     prefix_misses: int = 0            # full prompt pages that had to be filled
     prefix_hit_tokens: int = 0        # prompt tokens whose prefill was skipped
+    cross_trace_hits: int = 0         # hits on pages filled by an earlier trace
+    cross_trace_hit_tokens: int = 0   # their token count
     evictions: int = 0                # cached prefix pages reclaimed
+    orphaned_live: int = 0            # live pages unindexed by a parent eviction
     peak_pages_in_use: int = 0        # max live (refcount > 0) pages
     cached_pages: int = 0             # refcount-0 pages still in the index
 
+    # Gauges keep their current value in a per-trace delta; everything
+    # else is a monotonic counter and diffs.
+    _GAUGES = ("n_pages", "page_size", "peak_pages_in_use", "cached_pages")
+
     def as_dict(self) -> dict:
+        """Lifetime counters as a plain dict.  ``Scheduler.last_stats``
+        carries per-trace :meth:`delta` views, not this."""
         return dataclasses.asdict(self)
+
+    def delta(self, since: "PageStats") -> dict:
+        """Per-trace view: counters since the ``since`` snapshot, gauges
+        at their current value."""
+        out = {}
+        for f in dataclasses.fields(self):
+            cur = getattr(self, f.name)
+            out[f.name] = (
+                cur if f.name in self._GAUGES else cur - getattr(since, f.name)
+            )
+        return out
+
+    def snapshot(self) -> "PageStats":
+        return dataclasses.replace(self)
 
 
 class PagePool:
@@ -118,9 +158,26 @@ class PagePool:
         # prompt prefix (LIVE or CACHED).
         self._index: Dict[str, int] = {}
         self._page_hash: Dict[int, str] = {}      # inverse of _index
+        # Chain structure of the index: hash -> parent hash / child
+        # hashes, so evicting a parent can free its (now unreachable)
+        # descendants' accounting instead of letting them squat in the
+        # LRU (see _orphan_descendants).
+        self._parent: Dict[str, Optional[str]] = {}
+        self._children: Dict[str, List[str]] = {}
         # CACHED pages in LRU order (oldest first).
         self._lru: "OrderedDict[int, None]" = OrderedDict()
+        # Trace accounting for persistent sessions: begin_trace() bumps
+        # the id; a hit on a page filled under an older id is a
+        # cross-trace hit.  A pool that never sees begin_trace() stays
+        # in trace 0 and counts everything as intra-trace.
+        self.trace_id = 0
+        self._page_trace: Dict[int, int] = {}
         self.stats = PageStats(n_pages=self.usable_pages, page_size=page_size)
+
+    def begin_trace(self) -> None:
+        """Mark a trace boundary: pages indexed before this call count
+        as cross-trace when hit afterwards."""
+        self.trace_id += 1
 
     # ------------------------------ queries ---------------------------------
     def refcount(self, page: int) -> int:
@@ -156,11 +213,53 @@ class PagePool:
         return pages, hashes
 
     # ----------------------------- transitions ------------------------------
+    def _unlink_from_parent(self, h: str) -> None:
+        par = self._parent.pop(h, None)
+        if par is not None:
+            sibs = self._children.get(par)
+            if sibs is not None:
+                if h in sibs:
+                    sibs.remove(h)
+                if not sibs:
+                    del self._children[par]
+
+    def _orphan_descendants(self, h: str) -> None:
+        """Chain hashing makes every descendant of an evicted hash
+        unreachable by ``match_prefix`` (the walk stops at the first
+        miss), so keeping them indexed only leaks accounting: a CACHED
+        orphan squats in the LRU competing with reachable pages, and a
+        LIVE orphan would re-enter the LRU at release and squat forever.
+        Free them instead: cached orphans go straight back to the free
+        list (counted as evictions — they are reclaimed cache), live
+        orphans just lose their index entry and free like private pages
+        when their tenant retires.  Iterative (a worklist, not
+        recursion): a long prompt's chain can be thousands of pages
+        deep."""
+        work = list(self._children.pop(h, []))
+        while work:
+            c = work.pop()
+            work.extend(self._children.pop(c, []))
+            page = self._index.pop(c, None)
+            if page is None:                    # already dropped
+                continue
+            self._page_hash.pop(page, None)
+            self._parent.pop(c, None)
+            self._page_trace.pop(page, None)
+            if self._ref[page] == 0:
+                self._lru.pop(page, None)
+                self._free.append(page)
+                self.stats.evictions += 1
+            else:
+                self.stats.orphaned_live += 1
+
     def _evict_one(self) -> int:
         page, _ = self._lru.popitem(last=False)       # oldest cached page
         h = self._page_hash.pop(page)
         del self._index[h]
+        self._unlink_from_parent(h)
+        self._page_trace.pop(page, None)
         self.stats.evictions += 1
+        self._orphan_descendants(h)
         return page
 
     def allocate(self, n: int) -> List[int]:
@@ -180,40 +279,65 @@ class PagePool:
         self._track_peak()
         return out
 
+    def _cross_trace_count(self, pages: List[int]) -> int:
+        return sum(
+            1 for p in pages
+            if self._page_trace.get(p, self.trace_id) < self.trace_id
+        )
+
     def ref(self, pages: List[int]) -> None:
         """Take a reference on resident prefix pages (a hit).  CACHED
-        pages return to LIVE."""
+        pages return to LIVE.  Hits on pages filled by an earlier trace
+        (older ``trace_id``) also count as cross-trace hits."""
         for page in pages:
             if self._ref[page] == 0:
                 self._lru.pop(page, None)
             self._ref[page] += 1
+        cross = self._cross_trace_count(pages)
         self.stats.prefix_hits += len(pages)
         self.stats.prefix_hit_tokens += len(pages) * self.page_size
+        self.stats.cross_trace_hits += cross
+        self.stats.cross_trace_hit_tokens += cross * self.page_size
         self._track_peak()
 
     def unref(self, pages: List[int]) -> None:
         """Roll back a :meth:`ref` that did not lead to an admission
         (e.g. the page pool could not cover the request's fresh pages).
-        Reverses both the refcounts and the hit counters the ref charged;
-        ``peak_pages_in_use`` stays a true high-water mark, transient
-        pins included."""
+        Reverses both the refcounts and the hit counters the ref charged
+        (cross-trace ones included — page fill-trace ids cannot change
+        between a ref and its rollback); ``peak_pages_in_use`` stays a
+        true high-water mark, transient pins included."""
         self.release(pages)
+        cross = self._cross_trace_count(pages)
         self.stats.prefix_hits -= len(pages)
         self.stats.prefix_hit_tokens -= len(pages) * self.page_size
+        self.stats.cross_trace_hits -= cross
+        self.stats.cross_trace_hit_tokens -= cross * self.page_size
 
-    def register_prefix(self, hashes: List[str], pages: List[int]) -> None:
+    def register_prefix(self, hashes: List[str], pages: List[int],
+                        parent: Optional[str] = None) -> None:
         """Index freshly-allocated pages as prefix pages (content is
         filled by the admission's prefill program before any later
-        admission can look them up)."""
-        for h, page in zip(hashes, pages):
+        admission can look them up).  ``hashes`` is a contiguous chain
+        run: entry ``i+1`` is a child of entry ``i``; ``parent`` is the
+        chain hash preceding ``hashes[0]`` (``None`` for a chain root) —
+        the linkage eviction uses to free orphaned descendants."""
+        for i, (h, page) in enumerate(zip(hashes, pages)):
             old = self._index.get(h)
-            if old is not None and old != page:
-                # The same prefix was filled twice concurrently (burst
-                # split); keep the existing entry, the new page stays a
-                # private unindexed page.
+            if old is not None:
+                # Either a re-registration of the same pair (no-op) or
+                # the same prefix filled twice concurrently (burst
+                # split): keep the existing entry — the new page stays a
+                # private unindexed page — and keep the existing chain
+                # links either way.
                 continue
             self._index[h] = page
             self._page_hash[page] = h
+            self._page_trace[page] = self.trace_id
+            par = hashes[i - 1] if i > 0 else parent
+            self._parent[h] = par
+            if par is not None:
+                self._children.setdefault(par, []).append(h)
         self.stats.prefix_misses += len(hashes)
 
     def release(self, pages: List[int]) -> None:

@@ -1,4 +1,5 @@
-"""Continuous-batching serving: paged KV-cache pool + scheduler.
+"""Continuous-batching serving: paged KV-cache pool, persistent
+sessions, streaming delivery.
 
 The bucketed ``Engine`` holds every request of an equal-length batch
 until the WHOLE batch finishes — one long generation stalls the bucket
@@ -30,25 +31,40 @@ paging:
     one at a time; programs are keyed by (prompt-tail bucket,
     power-of-two batch width), keeping the compile budget bounded.
 
-Both are ``Scheduler`` options that default ON; ``paged=False``
-reproduces the previous monolithic per-slot behavior exactly (that
-path still runs ``lm.prefill`` + ``lm.insert_cache_slot``).
+All serve-loop *state* lives in a long-lived :class:`ServeSession`: the
+device cache pool, the ``PagePool`` prefix index, the slot allocator
+and the per-slot host arrays are built ONCE and survive across an
+arbitrary sequence of ``submit()`` / ``step()`` / ``serve()`` calls.
+A system-prompt prefix filled by one trace is therefore a *hit* in the
+next (``PageStats.cross_trace_hits``) instead of the cold miss the old
+per-``serve()`` pool rebuild forced.  ``submit()`` returns a
+:class:`StreamHandle` whose tokens are observable as they are produced
+(``on_token`` per-step callback, iterator-style ``stream()`` drain);
+``Scheduler.serve()`` is now a thin batch wrapper over the scheduler's
+persistent default session.
+
+Both paging features are ``Scheduler`` options that default ON;
+``paged=False`` reproduces the pre-paging monolithic per-slot behavior
+exactly (that path still runs ``lm.prefill`` + ``lm.insert_cache_slot``,
+through the same persistent session machinery).
 
 Scheduling never changes numerics: for greedy decoding the served
 tokens are *token-exact* against ``Engine.generate`` run per request
-(tests/test_serve_scheduler.py), with paging, prefix reuse and burst
-prefill all enabled.  Admission control raises the shared ``ValueError``
-capacity contract (``serve.check_capacity`` + per-pool
-``paging.check_page_capacity``).  See docs/serving.md for the full
-design.
+(tests/test_serve_scheduler.py, tests/test_serve_session.py), with
+paging, prefix reuse, burst prefill and session persistence all
+enabled.  Admission control raises the shared ``ValueError`` capacity
+contract (``serve.check_capacity`` + per-pool
+``paging.check_page_capacity`` + ``serve.check_unique_rids``).  See
+docs/serving.md for the full design.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from collections import deque
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Set, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +75,7 @@ from repro.models.config import LMConfig
 
 from .engine import (
     check_capacity,
+    check_unique_rids,
     derive_request_keys,
     numerics_ctx,
     sample_tokens,
@@ -74,6 +91,7 @@ class Request:
     temperature: float = 0.0
     rid: Optional[int] = None          # defaults to submission index
     arrival: int = 0                   # earliest scheduler step it may join
+                                       # (relative to the current trace)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -87,7 +105,7 @@ class RequestResult:
     arrival: int
     admitted_step: int
     finished_step: int
-    finished_wall_s: float             # seconds since serve() started
+    finished_wall_s: float             # seconds since the trace started
     prefix_hit_tokens: int = 0         # prompt tokens served from cached pages
 
     @property
@@ -107,7 +125,12 @@ class ServeStats:
     prefill_batches: int = 0           # prefill programs launched (== prefills
                                        # without burst batching)
     prefix_reuse_active: bool = False
-    paging: Optional[dict] = None      # PageStats.as_dict() in paged mode
+    paging: Optional[dict] = None      # per-trace PageStats delta in paged mode
+                                       # (cross_trace_* fields count hits on
+                                       # pages filled by EARLIER traces)
+    trace_index: int = 0               # which trace of the session this was
+    pool_bytes: int = 0                # device cache-pool footprint (persists
+                                       # across traces)
 
 
 class SlotAllocator:
@@ -223,14 +246,570 @@ def _burst_prefill_fn(params, pool, tokens, block_tables, slots, ctx_len,
     return pool, toks
 
 
+class StreamHandle:
+    """Observable handle for one submitted request.
+
+    Tokens land on the handle as the session produces them — the first
+    token at admission (sampled by the prefill program), one more per
+    decode step until retirement (EOS or ``n_tokens``).  Two ways to
+    observe them:
+
+      * ``on_token(handle, token)`` — called synchronously for every
+        produced token, from inside :meth:`ServeSession.step`, after
+        that step's slot bookkeeping has completed (so a raising
+        callback interrupts the caller but never corrupts the session;
+        callbacks it pre-empted fire on the next ``step()``);
+      * ``stream()`` — an iterator that yields tokens as they are
+        produced, pumping ``session.step()`` whenever it runs dry.
+
+    ``result`` is the final :class:`RequestResult` (``None`` until the
+    request retires); ``generated`` is the tokens produced *so far*."""
+
+    def __init__(self, session: "ServeSession", request: Request,
+                 key: np.ndarray,
+                 on_token: Optional[Callable[["StreamHandle", int], None]] = None):
+        self.session = session
+        self.request = request
+        self.rid = request.rid
+        self.key = np.asarray(key)
+        self.on_token = on_token
+        self.result: Optional[RequestResult] = None
+        self._tokens: List[int] = []
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+    @property
+    def n_generated(self) -> int:
+        return len(self._tokens)
+
+    @property
+    def generated(self) -> np.ndarray:
+        return np.asarray(self._tokens, np.int32)
+
+    def stream(self) -> Iterator[int]:
+        """Yield this request's generated tokens in order, driving the
+        session forward (``session.step()``) whenever none are pending.
+        Other concurrently-submitted requests make progress too — their
+        handles fill while this one streams."""
+        i = 0
+        while True:
+            while i < len(self._tokens):
+                yield self._tokens[i]
+                i += 1
+            if self.done:
+                return
+            self.session.step()
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        state = "done" if self.done else "live"
+        return f"StreamHandle(rid={self.rid}, {state}, {self.n_generated} tokens)"
+
+
+class ServeSession:
+    """Long-lived serving state over one :class:`Scheduler`'s compiled
+    programs.
+
+    The device cache pool (paged or monolithic), the ``PagePool`` host
+    index, the slot allocator and the per-slot host arrays are built
+    once, here, and survive across traces: a *trace* is one busy period
+    — it begins when a request is submitted to an idle session and ends
+    when the last live request retires.  Step numbers (``arrival``,
+    ``admitted_step``, ``finished_step``) are relative to the current
+    trace, so back-to-back ``serve()`` calls see the same schedule they
+    always did — but prefix pages cached by an earlier trace are HITS
+    (``ServeStats.paging["cross_trace_hits"]``), not cold misses, and
+    no device allocation or jit compile happens between traces.
+
+    ``submit()`` enqueues one request and returns its
+    :class:`StreamHandle`; ``step()`` runs one scheduler tick
+    (admissions, then one decode step over all slots); ``drain()``
+    steps until idle; ``serve()`` is submit-all + drain with
+    batch-level validation, returning results in submission order."""
+
+    def __init__(self, sched: "Scheduler"):
+        self.s = sched
+        S = sched.max_slots
+        if sched.paged:
+            self.pool = lm.init_paged_pool(
+                sched.cfg, S, sched.n_pages, sched.page_size
+            )
+            self.ppool: Optional[PagePool] = PagePool(
+                sched.n_pages, sched.page_size
+            )
+            self.btables = np.zeros((S, sched.pages_per_slot), np.int32)
+        else:
+            self.pool = lm.init_cache(sched.cfg, S, sched.max_len)
+            self.ppool = None
+            self.btables = None
+        self.pool_bytes = lm.pool_nbytes(self.pool)
+        self.alloc = SlotAllocator(S)
+        self.pos = np.zeros(S, np.int32)
+        self.active = np.zeros(S, bool)
+        self.cur = np.zeros(S, np.int32)
+        self.keys = np.zeros((S, 2), np.uint32)
+        self.steps = np.zeros(S, np.int32)     # tokens sampled per occupant
+        self.temps = np.zeros(S, np.float32)
+        self.occupant: List[Optional[dict]] = [None] * S
+
+        # Pending admissions, sorted by arrival (FIFO within a step).
+        # A deque: the admission loops pop the head O(1); the rare
+        # mid-trace out-of-order submit pays an O(n) insert instead.
+        self.queue: "deque[StreamHandle]" = deque()
+        # Tokens recorded but whose on_token callbacks have not fired
+        # yet: callbacks run AFTER a step's slot bookkeeping completes,
+        # so a raising callback can never leave the session half-updated
+        # (undelivered callbacks fire on the next step()/drain()).
+        self._events: "deque[Tuple[StreamHandle, int]]" = deque()
+        self._live_rids: Set[int] = set()
+        self._next_rid = 0                     # submit() auto-id counter
+        self.trace_index = -1                  # bumped at each trace start
+        self._in_trace = False
+        self.last_stats: Optional[ServeStats] = None
+        self._reset_trace_counters()
+
+    # --------------------------- trace lifecycle -----------------------------
+    def _reset_trace_counters(self) -> None:
+        self.step_idx = 0
+        self.decode_steps = 0
+        self.prefills = 0
+        self.prefill_batches = 0
+        self.active_slot_steps = 0
+        self.gen_tokens = 0
+        self._t0 = time.perf_counter()
+        self._pg0 = self.ppool.stats.snapshot() if self.ppool else None
+
+    def _ensure_trace(self) -> None:
+        if self._in_trace:
+            return
+        self.trace_index += 1
+        self._in_trace = True
+        if self.ppool is not None:
+            self.ppool.begin_trace()
+        self._reset_trace_counters()
+
+    def _finalize_trace(self) -> None:
+        self._in_trace = False
+        stats = ServeStats(
+            steps=self.step_idx,
+            decode_steps=self.decode_steps,
+            prefills=self.prefills,
+            max_slots=self.s.max_slots,
+            generated_tokens=self.gen_tokens,
+            wall_s=time.perf_counter() - self._t0,
+            occupancy=(
+                self.active_slot_steps / (self.decode_steps * self.s.max_slots)
+                if self.decode_steps else 0.0
+            ),
+            prefill_batches=self.prefill_batches,
+            prefix_reuse_active=self.s.prefix_reuse_active,
+            paging=(
+                self.ppool.stats.delta(self._pg0)
+                if self.ppool is not None else None
+            ),
+            trace_index=self.trace_index,
+            pool_bytes=self.pool_bytes,
+        )
+        self.last_stats = stats
+        self.s.last_stats = stats
+
+    @property
+    def idle(self) -> bool:
+        """No queued and no decoding requests."""
+        return not self.queue and not self.active.any()
+
+    # --------------------------- token delivery ------------------------------
+    def _record_token(self, handle: StreamHandle, tok: int) -> None:
+        """Record a produced token on its handle; the on_token callback
+        is deferred to the end of the current step so user code runs
+        only against consistent session state."""
+        handle._tokens.append(int(tok))
+        self.gen_tokens += 1
+        if handle.on_token is not None:
+            self._events.append((handle, int(tok)))
+
+    def _emit_events(self) -> None:
+        while self._events:
+            handle, tok = self._events.popleft()
+            handle.on_token(handle, tok)
+
+    # ----------------------------- submission --------------------------------
+    def _validate(self, req: Request) -> None:
+        if req.n_tokens < 1:
+            raise ValueError(f"request {req.rid}: n_tokens must be >= 1")
+        if req.prompt.size < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        check_capacity(req.prompt.size, req.n_tokens, self.s.max_len)
+        if self.s.paged:
+            check_page_capacity(
+                req.prompt.size, req.n_tokens, self.s.page_size,
+                self.s.n_pages - 1,
+            )
+        if req.rid in self._live_rids:
+            # Results are keyed (and PRNG streams derived) by rid: a
+            # collision with a LIVE request would overwrite its output
+            # and share its sampling stream.
+            raise ValueError(
+                f"duplicate request id {req.rid}: a request with this id "
+                f"is still queued or decoding in this session"
+            )
+
+    def _auto_rid(self) -> int:
+        while self._next_rid in self._live_rids:
+            self._next_rid += 1
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
+
+    def _enqueue(self, req: Request, seed: Optional[int],
+                 on_token=None, sorted_insert: bool = True) -> StreamHandle:
+        """Post-validation enqueue shared by ``submit`` and ``serve``."""
+        seed = self.s.seed if seed is None else seed
+        key = np.asarray(derive_request_keys(seed, [req.rid])[0])
+        self._ensure_trace()
+        handle = StreamHandle(self, req, key, on_token=on_token)
+        self._live_rids.add(req.rid)
+        if sorted_insert:
+            idx = bisect.bisect_right(
+                [h.request.arrival for h in self.queue], req.arrival
+            )
+            self.queue.insert(idx, handle)
+        else:
+            self.queue.append(handle)   # caller re-sorts the batch once
+        return handle
+
+    def submit(
+        self,
+        request: Union[Request, np.ndarray, list],
+        seed: Optional[int] = None,
+        on_token: Optional[Callable[[StreamHandle, int], None]] = None,
+    ) -> StreamHandle:
+        """Enqueue one request (validated now — the shared ``ValueError``
+        capacity/rid contracts — but admitted by a later ``step()``).
+        Safe to call mid-trace: the request joins the current trace with
+        ``arrival`` relative to its step counter.  A failed validation
+        leaves the session untouched and reusable."""
+        req = request if isinstance(request, Request) else Request(prompt=request)
+        if req.rid is None:
+            req = dataclasses.replace(req, rid=self._auto_rid())
+        self._validate(req)
+        return self._enqueue(req, seed, on_token=on_token)
+
+    def serve(
+        self,
+        requests: Sequence[Union[Request, np.ndarray, list]],
+        seed: Optional[int] = None,
+    ) -> List[RequestResult]:
+        """Submit a whole arrival trace and drain it to completion;
+        results come back in submission order and the trace's
+        ``ServeStats`` lands on ``last_stats`` (and on the scheduler).
+        The WHOLE batch is validated before any request is enqueued, so
+        a rejected trace leaves the session state untouched.  Default
+        rids count up from 0 (the historical submission-index ids) but
+        skip ids still live in the session, so serving a batch alongside
+        in-flight ``submit()`` handles cannot spuriously collide."""
+        reqs: List[Request] = []
+        taken = set(self._live_rids)
+        for i, r in enumerate(requests):
+            if not isinstance(r, Request):
+                r = Request(prompt=r)
+            if r.rid is None:
+                rid = i                 # historical submission-index default
+                while rid in taken:     # ...unless a live/assigned id holds it
+                    rid += 1
+                r = dataclasses.replace(r, rid=rid)
+                taken.add(rid)
+            reqs.append(r)
+        check_unique_rids([r.rid for r in reqs])
+        for r in reqs:
+            self._validate(r)
+        if not reqs:
+            # On an idle session an empty serve() still lands fresh
+            # stats: an empty trace begins and finalizes immediately
+            # (all-zero counters) instead of leaving a previous trace's
+            # numbers up.  Mid-trace (live submit() handles) it must NOT
+            # finalize — that would publish partial stats and reset the
+            # running trace's counters under its in-flight requests.
+            if self.idle:
+                self._ensure_trace()
+                self._finalize_trace()
+            return []
+        handles = [self._enqueue(r, seed, sorted_insert=False) for r in reqs]
+        # One stable sort for the whole batch: equal arrivals keep
+        # submission order, earlier queue entries keep their slots.
+        ordered = sorted(self.queue, key=lambda h: h.request.arrival)
+        self.queue.clear()
+        self.queue.extend(ordered)
+        self.drain()
+        return [h.result for h in handles]
+
+    # ------------------------------ stepping ---------------------------------
+    def drain(self) -> None:
+        """Step until the session is idle (every queued and live request
+        has retired), then flush any deferred on_token callbacks — so a
+        drain() after a raising callback always delivers what the raise
+        pre-empted, even when the session is already idle."""
+        while not self.idle:
+            self.step()
+        self._emit_events()
+
+    def step(self) -> int:
+        """One scheduler tick: admit every queued request that fits,
+        then run one decode step over the active slots.  Returns the
+        number of tokens delivered to handles this tick (admission
+        first-tokens included).  On an idle session this is a no-op
+        returning 0."""
+        if self.idle:
+            self._emit_events()      # callbacks a raising peer pre-empted
+            return 0
+        before = self.gen_tokens
+        with self.s._numerics():
+            if self.s.paged:
+                self._admit_all_paged()
+            else:
+                self._admit_legacy()
+            if not self.active.any():
+                if self.queue and self.queue[0].request.arrival <= self.step_idx:
+                    raise RuntimeError(      # pragma: no cover
+                        "admission stalled with an idle pool — "
+                        "page accounting bug"
+                    )
+                if self.queue:
+                    # Nothing running: jump straight to the next arrival
+                    # instead of ticking through the gap.
+                    self.step_idx = max(
+                        self.step_idx + 1, self.queue[0].request.arrival
+                    )
+                else:
+                    self._finalize_trace()
+                # Snapshot before callbacks run: a callback may submit()
+                # a follow-up request, beginning a new trace that resets
+                # the counters this return value is computed from.
+                produced = self.gen_tokens - before
+                self._emit_events()
+                return produced
+            self._decode_once()
+        if self.idle:
+            self._finalize_trace()
+        produced = self.gen_tokens - before
+        self._emit_events()
+        return produced
+
+    def _decode_once(self) -> None:
+        if self.s.paged:
+            self.pool, nxt = self.s._decode(
+                self.s.params, self.pool, jnp.asarray(self.cur),
+                jnp.asarray(self.pos), jnp.asarray(self.active),
+                jnp.asarray(self.btables), jnp.asarray(self.keys),
+                jnp.asarray(self.steps), jnp.asarray(self.temps),
+            )
+        else:
+            self.pool, nxt = self.s._decode(
+                self.s.params, self.pool, jnp.asarray(self.cur),
+                jnp.asarray(self.pos), jnp.asarray(self.active),
+                jnp.asarray(self.keys), jnp.asarray(self.steps),
+                jnp.asarray(self.temps),
+            )
+        nxt = np.asarray(nxt)
+        self.decode_steps += 1
+        self.active_slot_steps += int(self.active.sum())
+        self.step_idx += 1
+        self.pos[self.active] += 1
+        self.steps[self.active] += 1
+        for slot in np.flatnonzero(self.active):
+            tok = int(nxt[slot])
+            st = self.occupant[slot]
+            self._record_token(st["handle"], tok)
+            st["remaining"] -= 1
+            self.cur[slot] = tok
+            if st["remaining"] == 0 or tok == self.s.eos_id:
+                self._finish(slot)
+
+    # --------------------------- slot bookkeeping ----------------------------
+    def _finish(self, slot: int) -> None:
+        st = self.occupant[slot]
+        handle: StreamHandle = st["handle"]
+        req = handle.request
+        handle.result = RequestResult(
+            rid=req.rid,
+            tokens=np.concatenate(
+                [req.prompt, np.asarray(handle._tokens, np.int32)]
+            ),
+            prompt_len=req.prompt.size,
+            arrival=req.arrival,
+            admitted_step=st["admitted"],
+            finished_step=self.step_idx,
+            finished_wall_s=time.perf_counter() - self._t0,
+            prefix_hit_tokens=st["prefix_hit_tokens"],
+        )
+        self._live_rids.discard(req.rid)
+        if self.s.paged:
+            self.ppool.release(st["pages"])
+            # An inactive slot's clamped decode write must land in
+            # the garbage page, never in a (possibly reallocated)
+            # page of the retired occupant.
+            self.btables[slot, :] = 0
+        self.occupant[slot] = None
+        self.active[slot] = False
+        self.alloc.release(slot)
+
+    def _seat(self, slot: int, handle: StreamHandle, tok0: int,
+              admitted: int, pages: List[int], hit_tokens: int) -> None:
+        """Common post-prefill bookkeeping for both modes."""
+        req = handle.request
+        self.occupant[slot] = {
+            "handle": handle, "remaining": req.n_tokens - 1,
+            "admitted": admitted, "pages": pages,
+            "prefix_hit_tokens": hit_tokens,
+        }
+        self.pos[slot] = req.prompt.size
+        self.active[slot] = True
+        self.cur[slot] = tok0
+        self.keys[slot] = handle.key
+        self.steps[slot] = 1
+        self.temps[slot] = req.temperature
+        self._record_token(handle, tok0)
+        if self.occupant[slot]["remaining"] == 0 or tok0 == self.s.eos_id:
+            self._finish(slot)
+
+    # --------------------------- legacy admission ----------------------------
+    def _admit_legacy(self) -> None:
+        while (self.queue and self.queue[0].request.arrival <= self.step_idx
+               and self.alloc.free_count):
+            handle = self.queue.popleft()
+            req = handle.request
+            slot = self.alloc.acquire()
+            P = req.prompt.size
+            bucket = self.s._bucket_for(P)
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :P] = req.prompt
+            self.pool, tok0 = self.s._prefill_jit(bucket)(
+                self.s.params, self.pool, jnp.asarray(padded),
+                np.int32(P), np.int32(slot), jnp.asarray(handle.key),
+                np.float32(req.temperature),
+            )
+            self.prefills += 1
+            self.prefill_batches += 1
+            self._seat(slot, handle, int(tok0), self.step_idx, [], 0)
+
+    # ---------------------------- paged admission ----------------------------
+    def _try_admit_paged(self, handle: StreamHandle, pending: Set[int]):
+        """Reserve a slot + pages for ``handle``'s request.  Returns an
+        admission dict, None (cannot admit now: no slot / not enough
+        pages), or "conflict" (its prefix pages are pending fill in the
+        current burst group — flush the group first)."""
+        if not self.alloc.free_count:
+            return None
+        req = handle.request
+        ppool = self.ppool
+        P = req.prompt.size
+        need = pages_needed(P, req.n_tokens, self.s.page_size)
+        if self.s.prefix_reuse_active:
+            matched, hashes = ppool.match_prefix(req.prompt)
+            if pending.intersection(matched):
+                return "conflict"
+        else:
+            matched, hashes = [], []
+        ppool.ref(matched)          # pin before allocation can evict
+        fresh_needed = need - len(matched)
+        if fresh_needed > ppool.available():
+            ppool.unref(matched)    # roll back the pin (and its stats)
+            return None
+        fresh = ppool.allocate(fresh_needed)
+        pages = matched + fresh
+        if self.s.prefix_reuse_active and len(hashes) > len(matched):
+            ppool.register_prefix(
+                hashes[len(matched):], pages[len(matched):len(hashes)],
+                parent=hashes[len(matched) - 1] if matched else None,
+            )
+        slot = self.alloc.acquire()
+        self.btables[slot, :need] = pages
+        self.btables[slot, need:] = 0
+        ctx = len(matched) * self.s.page_size
+        return {
+            "handle": handle, "slot": slot, "pages": pages, "ctx_len": ctx,
+            "tail": req.prompt[ctx:], "fresh": fresh,
+        }
+
+    def _run_group(self, group: List[dict]) -> None:
+        S = self.s.max_slots
+        Bg = len(group)
+        Bpad = 1 << (Bg - 1).bit_length()
+        bucket = self.s._bucket_for(max(len(g["tail"]) for g in group))
+        tokens = np.zeros((Bpad, bucket), np.int32)
+        bt = np.zeros((Bpad, self.s.pages_per_slot), np.int32)
+        slots_arr = np.full(Bpad, S, np.int32)      # garbage slot default
+        ctx = np.zeros(Bpad, np.int32)
+        tv = np.zeros(Bpad, np.int32)
+        temps_g = np.zeros(Bpad, np.float32)
+        keys_g = np.zeros((Bpad, 2), np.uint32)
+        for i, g in enumerate(group):
+            T = len(g["tail"])
+            tokens[i, :T] = g["tail"]
+            bt[i] = self.btables[g["slot"]]
+            slots_arr[i] = g["slot"]
+            ctx[i] = g["ctx_len"]
+            tv[i] = T
+            temps_g[i] = g["handle"].request.temperature
+            keys_g[i] = g["handle"].key
+        self.pool, toks = self.s._prefill_jit((bucket, Bpad))(
+            self.s.params, self.pool, jnp.asarray(tokens), jnp.asarray(bt),
+            jnp.asarray(slots_arr), jnp.asarray(ctx), jnp.asarray(tv),
+            jnp.asarray(keys_g), jnp.asarray(temps_g),
+        )
+        toks = np.asarray(toks)
+        self.prefills += Bg
+        self.prefill_batches += 1
+        for i, g in enumerate(group):
+            self._seat(g["slot"], g["handle"], int(toks[i]), self.step_idx,
+                       g["pages"], g["ctx_len"])
+
+    def _admit_all_paged(self) -> None:
+        """Admit as many queue heads as fit, in arrival order, in burst
+        groups; a group flushes when a member's prefix pages are still
+        pending fill by the group itself (its context gather must see
+        them filled), or when burst batching is disabled."""
+        while self.queue and self.queue[0].request.arrival <= self.step_idx:
+            group: List[dict] = []
+            pending: Set[int] = set()
+            flush = False
+            while (self.queue and self.queue[0].request.arrival <= self.step_idx
+                   and not flush):
+                adm = self._try_admit_paged(self.queue[0], pending)
+                if adm is None:
+                    break
+                if adm == "conflict":
+                    flush = True
+                    break
+                self.queue.popleft()
+                group.append(adm)
+                pending.update(adm["fresh"])
+                if not self.s.burst_prefill:
+                    break
+            if not group:
+                # No admission possible (no slot / not enough pages);
+                # a "conflict" with an empty group cannot happen —
+                # pending is empty until a member joins.
+                return
+            self._run_group(group)      # may finish slots -> keep admitting
+
+
 class Scheduler:
     """Continuous-batching engine over a paged KV-cache pool.
 
-    Compiled-program budget across ANY trace: one decode program plus —
-    in paged mode — one prefill program per (tail bucket, power-of-two
-    burst width) pair actually used; with ``paged=False`` one prefill
-    program per prompt bucket.  ``compile_counts`` exposes the jit cache
-    sizes so tests assert this instead of eyeballing."""
+    The scheduler owns the *compiled programs* and their configuration;
+    all serve-loop state lives in a persistent :class:`ServeSession`
+    (``session()``), created lazily on first use and shared by every
+    ``serve()`` / ``submit()`` / ``step()`` call — so the device pool,
+    the prefix cache and the jit caches survive across traces.
+
+    Compiled-program budget across ANY trace — and across every trace
+    of a session — is one decode program plus, in paged mode, one
+    prefill program per (tail bucket, power-of-two burst width) pair
+    actually used; with ``paged=False`` one prefill program per prompt
+    bucket.  ``compile_counts`` exposes the jit cache sizes so tests
+    assert this instead of eyeballing."""
 
     def __init__(
         self,
@@ -301,13 +880,15 @@ class Scheduler:
             and cfg.cache_dtype == cfg.compute_dtype
         )
 
-        # The cache pool is donated: serve() always rebinds it to the
-        # returned value, and aliasing lets XLA update the biggest
-        # buffer of the hot loop in place instead of copying it per step.
+        # The cache pool is donated: every program call rebinds the
+        # session's pool to the returned value, and aliasing lets XLA
+        # update the biggest buffer of the hot loop in place instead of
+        # copying it per step.
         decode = _decode_paged_fn if self.paged else _decode_fn
         self._decode = jax.jit(partial(decode, cfg=cfg), donate_argnums=(1,))
         self._prefills: Dict[Union[int, Tuple[int, int]], "jax.stages.Wrapped"] = {}
         self.last_stats: Optional[ServeStats] = None
+        self._session: Optional[ServeSession] = None
 
     # ----------------------------- plumbing ---------------------------------
     def _numerics(self):
@@ -342,7 +923,8 @@ class Scheduler:
         return fn
 
     def compile_counts(self) -> Dict[str, int]:
-        """Jit-cache sizes: the scheduler's whole compiled-program budget."""
+        """Jit-cache sizes: the scheduler's whole compiled-program
+        budget, shared by every session and every trace."""
         counts = {
             "decode": int(self._decode._cache_size()),
             "prefill": {k: int(f._cache_size()) for k, f in self._prefills.items()},
@@ -350,291 +932,39 @@ class Scheduler:
         counts["total"] = counts["decode"] + sum(counts["prefill"].values())
         return counts
 
-    # ----------------------------- serving ----------------------------------
+    # ----------------------------- sessions ----------------------------------
+    def session(self, fresh: bool = False) -> ServeSession:
+        """The scheduler's persistent :class:`ServeSession` (created on
+        first use).  ``fresh=True`` builds an independent session with
+        its own device pool and prefix cache — compiled programs are
+        still shared through this scheduler."""
+        if fresh:
+            return ServeSession(self)
+        if self._session is None:
+            self._session = ServeSession(self)
+        return self._session
+
+    def submit(self, request, seed: Optional[int] = None,
+               on_token=None) -> StreamHandle:
+        """Submit one request to the persistent session (see
+        :meth:`ServeSession.submit`)."""
+        return self.session().submit(request, seed=seed, on_token=on_token)
+
+    def step(self) -> int:
+        """One tick of the persistent session."""
+        return self.session().step()
+
+    def drain(self) -> None:
+        self.session().drain()
+
     def serve(
         self,
         requests: Sequence[Union[Request, np.ndarray, list]],
         seed: Optional[int] = None,
     ) -> List[RequestResult]:
-        """Serve an arrival trace to completion; results come back in
-        submission order.  ``ServeStats`` lands on ``self.last_stats``."""
-        seed = self.seed if seed is None else seed
-        reqs: List[Request] = []
-        for i, r in enumerate(requests):
-            if not isinstance(r, Request):
-                r = Request(prompt=r)
-            if r.rid is None:
-                r = dataclasses.replace(r, rid=i)
-            if r.n_tokens < 1:
-                raise ValueError(f"request {r.rid}: n_tokens must be >= 1")
-            if r.prompt.size < 1:
-                raise ValueError(f"request {r.rid}: empty prompt")
-            check_capacity(r.prompt.size, r.n_tokens, self.max_len)
-            if self.paged:
-                check_page_capacity(
-                    r.prompt.size, r.n_tokens, self.page_size, self.n_pages - 1
-                )
-            reqs.append(r)
-        rids = [r.rid for r in reqs]
-        if len(set(rids)) != len(rids):
-            # results are keyed (and PRNG streams derived) by rid — a
-            # collision would silently drop one request's output and
-            # give both the same sampling stream.
-            dup = sorted({r for r in rids if rids.count(r) > 1})
-            raise ValueError(f"duplicate request ids {dup}")
-
-        t0 = time.perf_counter()
-        S = self.max_slots
-        # Arrival order; stable for equal arrival steps.
-        queue = deque(sorted(reqs, key=lambda r: r.arrival))
-        alloc = SlotAllocator(S)
-        if self.paged:
-            pool = lm.init_paged_pool(
-                self.cfg, S, self.n_pages, self.page_size
-            )
-            ppool = PagePool(self.n_pages, self.page_size)
-            btables = np.zeros((S, self.pages_per_slot), np.int32)
-        else:
-            pool = lm.init_cache(self.cfg, S, self.max_len)
-            ppool = None
-            btables = None
-
-        pos = np.zeros(S, np.int32)
-        active = np.zeros(S, bool)
-        cur = np.zeros(S, np.int32)
-        keys = np.zeros((S, 2), np.uint32)
-        steps = np.zeros(S, np.int32)          # tokens sampled per occupant
-        temps = np.zeros(S, np.float32)
-        occupant: List[Optional[dict]] = [None] * S
-
-        results: Dict[int, RequestResult] = {}
-        step = 0
-        decode_steps = 0
-        prefills = 0
-        prefill_batches = 0
-        active_slot_steps = 0
-
-        def finish(slot: int) -> None:
-            st = occupant[slot]
-            results[st["req"].rid] = RequestResult(
-                rid=st["req"].rid,
-                tokens=np.concatenate(
-                    [st["req"].prompt, np.asarray(st["out"], np.int32)]
-                ),
-                prompt_len=st["req"].prompt.size,
-                arrival=st["req"].arrival,
-                admitted_step=st["admitted"],
-                finished_step=step,
-                finished_wall_s=time.perf_counter() - t0,
-                prefix_hit_tokens=st.get("prefix_hit_tokens", 0),
-            )
-            if self.paged:
-                ppool.release(st["pages"])
-                # An inactive slot's clamped decode write must land in
-                # the garbage page, never in a (possibly reallocated)
-                # page of the retired occupant.
-                btables[slot, :] = 0
-            occupant[slot] = None
-            active[slot] = False
-            alloc.release(slot)
-
-        def seat(slot: int, req: Request, tok0: int, key_r, admitted: int,
-                 pages: List[int], hit_tokens: int) -> None:
-            """Common post-prefill bookkeeping for both modes."""
-            occupant[slot] = {
-                "req": req, "out": [tok0], "remaining": req.n_tokens - 1,
-                "admitted": admitted, "pages": pages,
-                "prefix_hit_tokens": hit_tokens,
-            }
-            pos[slot] = req.prompt.size
-            active[slot] = True
-            cur[slot] = tok0
-            keys[slot] = np.asarray(key_r)
-            steps[slot] = 1
-            temps[slot] = req.temperature
-            if occupant[slot]["remaining"] == 0 or tok0 == self.eos_id:
-                finish(slot)
-
-        # ------------------------- legacy admission --------------------------
-        def admit_legacy(req: Request) -> None:
-            nonlocal pool, prefills, prefill_batches
-            slot = alloc.acquire()
-            P = req.prompt.size
-            bucket = self._bucket_for(P)
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :P] = req.prompt
-            key_r = derive_request_keys(seed, [req.rid])[0]
-            pool, tok0 = self._prefill_jit(bucket)(
-                self.params, pool, jnp.asarray(padded),
-                np.int32(P), np.int32(slot), key_r,
-                np.float32(req.temperature),
-            )
-            prefills += 1
-            prefill_batches += 1
-            seat(slot, req, int(tok0), key_r, step, [], 0)
-
-        # ------------------------- paged admission ---------------------------
-        def try_admit_paged(req: Request, pending: Set[int]):
-            """Reserve a slot + pages for ``req``.  Returns an admission
-            dict, None (cannot admit now: no slot / not enough pages),
-            or "conflict" (its prefix pages are pending fill in the
-            current burst group — flush the group first)."""
-            if not alloc.free_count:
-                return None
-            P = req.prompt.size
-            need = pages_needed(P, req.n_tokens, self.page_size)
-            if self.prefix_reuse_active:
-                matched, hashes = ppool.match_prefix(req.prompt)
-                if pending.intersection(matched):
-                    return "conflict"
-            else:
-                matched, hashes = [], []
-            ppool.ref(matched)          # pin before allocation can evict
-            fresh_needed = need - len(matched)
-            if fresh_needed > ppool.available():
-                ppool.unref(matched)    # roll back the pin (and its stats)
-                return None
-            fresh = ppool.allocate(fresh_needed)
-            pages = matched + fresh
-            if self.prefix_reuse_active and len(hashes) > len(matched):
-                ppool.register_prefix(
-                    hashes[len(matched):], pages[len(matched):len(hashes)]
-                )
-            slot = alloc.acquire()
-            btables[slot, :need] = pages
-            btables[slot, need:] = 0
-            ctx = len(matched) * self.page_size
-            return {
-                "req": req, "slot": slot, "pages": pages, "ctx_len": ctx,
-                "tail": req.prompt[ctx:], "fresh": fresh,
-            }
-
-        def run_group(group: List[dict]) -> None:
-            nonlocal pool, prefills, prefill_batches
-            Bg = len(group)
-            Bpad = 1 << (Bg - 1).bit_length()
-            bucket = self._bucket_for(max(len(g["tail"]) for g in group))
-            tokens = np.zeros((Bpad, bucket), np.int32)
-            bt = np.zeros((Bpad, self.pages_per_slot), np.int32)
-            slots_arr = np.full(Bpad, S, np.int32)      # garbage slot default
-            ctx = np.zeros(Bpad, np.int32)
-            tv = np.zeros(Bpad, np.int32)
-            temps_g = np.zeros(Bpad, np.float32)
-            keys_g = np.zeros((Bpad, 2), np.uint32)
-            reqs_keys = derive_request_keys(seed, [g["req"].rid for g in group])
-            for i, g in enumerate(group):
-                T = len(g["tail"])
-                tokens[i, :T] = g["tail"]
-                bt[i] = btables[g["slot"]]
-                slots_arr[i] = g["slot"]
-                ctx[i] = g["ctx_len"]
-                tv[i] = T
-                temps_g[i] = g["req"].temperature
-                keys_g[i] = np.asarray(reqs_keys[i])
-            pool_new, toks = self._prefill_jit((bucket, Bpad))(
-                self.params, pool, jnp.asarray(tokens), jnp.asarray(bt),
-                jnp.asarray(slots_arr), jnp.asarray(ctx), jnp.asarray(tv),
-                jnp.asarray(keys_g), jnp.asarray(temps_g),
-            )
-            pool = pool_new
-            toks = np.asarray(toks)
-            prefills += Bg
-            prefill_batches += 1
-            for i, g in enumerate(group):
-                seat(g["slot"], g["req"], int(toks[i]), reqs_keys[i], step,
-                     g["pages"], g["ctx_len"])
-
-        def admit_all_paged() -> None:
-            """Admit as many queue heads as fit, in arrival order, in
-            burst groups; a group flushes when a member's prefix pages
-            are still pending fill by the group itself (its context
-            gather must see them filled), or when burst batching is
-            disabled."""
-            while queue and queue[0].arrival <= step:
-                group: List[dict] = []
-                pending: Set[int] = set()
-                flush = False
-                while queue and queue[0].arrival <= step and not flush:
-                    adm = try_admit_paged(queue[0], pending)
-                    if adm is None:
-                        break
-                    if adm == "conflict":
-                        flush = True
-                        break
-                    queue.popleft()
-                    group.append(adm)
-                    pending.update(adm["fresh"])
-                    if not self.burst_prefill:
-                        break
-                if not group:
-                    # No admission possible (no slot / not enough pages);
-                    # a "conflict" with an empty group cannot happen —
-                    # pending is empty until a member joins.
-                    return
-                run_group(group)        # may finish slots -> keep admitting
-
-        with self._numerics():
-            while queue or active.any():
-                if self.paged:
-                    admit_all_paged()
-                else:
-                    while (queue and queue[0].arrival <= step
-                           and alloc.free_count):
-                        admit_legacy(queue.popleft())
-                if not active.any():
-                    if queue and queue[0].arrival <= step:
-                        raise RuntimeError(      # pragma: no cover
-                            "admission stalled with an idle pool — "
-                            "page accounting bug"
-                        )
-                    if not queue:
-                        break
-                    # Nothing running: jump straight to the next arrival
-                    # instead of ticking through the gap.
-                    step = max(step + 1, queue[0].arrival)
-                    continue
-                if self.paged:
-                    pool, nxt = self._decode(
-                        self.params, pool, jnp.asarray(cur), jnp.asarray(pos),
-                        jnp.asarray(active), jnp.asarray(btables),
-                        jnp.asarray(keys), jnp.asarray(steps),
-                        jnp.asarray(temps),
-                    )
-                else:
-                    pool, nxt = self._decode(
-                        self.params, pool, jnp.asarray(cur), jnp.asarray(pos),
-                        jnp.asarray(active), jnp.asarray(keys),
-                        jnp.asarray(steps), jnp.asarray(temps),
-                    )
-                nxt = np.asarray(nxt)
-                decode_steps += 1
-                active_slot_steps += int(active.sum())
-                step += 1
-                pos[active] += 1
-                steps[active] += 1
-                for slot in np.flatnonzero(active):
-                    tok = int(nxt[slot])
-                    st = occupant[slot]
-                    st["out"].append(tok)
-                    st["remaining"] -= 1
-                    cur[slot] = tok
-                    if st["remaining"] == 0 or tok == self.eos_id:
-                        finish(slot)
-
-        self.last_stats = ServeStats(
-            steps=step,
-            decode_steps=decode_steps,
-            prefills=prefills,
-            max_slots=S,
-            generated_tokens=sum(
-                r.tokens.size - r.prompt_len for r in results.values()
-            ),
-            wall_s=time.perf_counter() - t0,
-            occupancy=(
-                active_slot_steps / (decode_steps * S) if decode_steps else 0.0
-            ),
-            prefill_batches=prefill_batches,
-            prefix_reuse_active=self.prefix_reuse_active,
-            paging=ppool.stats.as_dict() if ppool is not None else None,
-        )
-        return [results[r.rid] for r in reqs]
+        """Serve an arrival trace to completion through the persistent
+        session; results come back in submission order and the trace's
+        ``ServeStats`` lands on ``self.last_stats``.  Unlike the
+        pre-session scheduler this does NOT rebuild the device pool:
+        prefix pages cached by an earlier ``serve()`` call are warm."""
+        return self.session().serve(requests, seed=seed)

@@ -55,6 +55,13 @@ def test_dryrun_sweep_persists_roofline_records(tmp_path):
         oks += 1
         assert rec["_record"]["wall_s"] > 0
         assert rec["n_devices"] in (256, 512)
+        # Sharding annotations must be rich enough that the SPMD
+        # partitioner never falls back to an involuntary full
+        # rematerialization (the copies the old scanned-transpose
+        # cross-entropy path forced on the 2x16x16 mesh).
+        assert rec.get("remat_warnings", 0) == 0, (
+            rec["arch"], rec["shape"], rec["mesh"], rec["remat_warnings"],
+        )
         # The record must round-trip into the roofline layer.
         row = analyze_record(rec)
         assert row.status == "ok"

@@ -1,8 +1,10 @@
-"""Paged KV-cache pool: PagePool allocator/refcount/eviction invariants,
+"""Paged KV-cache pool: PagePool allocator/refcount/eviction invariants
+(orphaned-chain cleanup and cross-trace accounting included),
 prefix-cache hit/miss accounting on Scheduler stats, the page-capacity
 ValueError contract, and the no-cross-request-leakage regression for
 refcounted pages."""
 import dataclasses
+from collections import Counter
 
 import jax
 import numpy as np
@@ -128,6 +130,152 @@ class TestPagePool:
         assert pool.stats.prefix_hit_tokens == 0
         assert all(pool.refcount(p) == 0 for p in pages)
         assert pool.match_prefix(prompt)[0] == pages
+
+    def test_evicted_parent_frees_cached_child_accounting(self):
+        """A cached child behind an evicted parent is unreachable by
+        construction (chain hashing) — evicting the parent must free the
+        orphan's accounting too, not leave it squatting in the LRU."""
+        pool = PagePool(n_pages=8, page_size=4)
+        prompt = np.arange(13, dtype=np.int32)        # 3 indexable pages
+        hashes = prefix_page_hashes(prompt, 4)
+        pages = pool.allocate(3)
+        pool.register_prefix(hashes, pages)
+        pool.release(pages)                           # all 3 -> CACHED
+        assert pool.available() == 7
+        # One eviction under pressure reclaims the parent AND its two
+        # orphaned descendants — the free list regains all three.
+        got = pool.allocate(5)                        # 4 free + parent evict
+        assert pool.stats.evictions == 3              # parent + 2 orphans
+        assert pool.stats.orphaned_live == 0
+        assert pool.match_prefix(prompt)[0] == []
+        assert pool.available() + pool.live_pages == pool.usable_pages
+        assert len(set(got)) == 5 and 0 not in got
+
+    def test_evicted_parent_unindexes_live_child_which_frees_privately(self):
+        """A LIVE child behind an evicted parent loses its index entry
+        (it could never be matched again) and frees like a private page
+        when its tenant retires — it must NOT re-enter the LRU."""
+        pool = PagePool(n_pages=8, page_size=4)
+        prompt = np.arange(12, dtype=np.int32)
+        hashes = prefix_page_hashes(prompt, 4)        # 3 chain hashes
+        pages = pool.allocate(2)
+        pool.register_prefix(hashes[:2], pages)
+        pool.release(pages[:1])                       # parent CACHED, child LIVE
+        pool.allocate(6)                              # 5 free + parent evict
+        assert pool.stats.evictions == 1
+        assert pool.stats.orphaned_live == 1
+        assert pool.match_prefix(prompt)[0] == []
+        avail_before = pool.available()
+        pool.release(pages[1:])                       # orphaned live child
+        assert pool.available() == avail_before + 1   # straight to free list
+        assert pool.stats.cached_pages == 0           # never re-cached
+        assert pool.available() + pool.live_pages == pool.usable_pages
+
+    def test_long_chain_orphan_cleanup_is_iterative(self):
+        """Evicting the root of a thousands-deep prefix chain must not
+        recurse once per page (RecursionError) — the orphan walk is a
+        worklist."""
+        pool = PagePool(n_pages=3002, page_size=1)
+        prompt = np.arange(3001, dtype=np.int32)   # 3000-hash chain
+        hashes = prefix_page_hashes(prompt, 1)[:3000]
+        pages = pool.allocate(3000)
+        pool.register_prefix(hashes, pages)
+        pool.release(pages)                        # whole chain CACHED
+        got = pool.allocate(3001)                  # evicts the root + orphans
+        assert len(got) == 3001
+        assert pool.stats.evictions == 3000
+        assert pool.match_prefix(prompt)[0] == []
+        assert pool.available() + pool.live_pages == pool.usable_pages
+
+    def test_cross_trace_hit_counters_and_unref_rollback(self):
+        """Hits on pages filled by an EARLIER trace count as cross-trace
+        (the persistent-session warm signal); intra-trace hits do not;
+        unref rolls the cross-trace counters back too."""
+        pool = PagePool(n_pages=6, page_size=4)
+        prompt = np.arange(9, dtype=np.int32)
+        hashes = prefix_page_hashes(prompt, 4)
+        pool.begin_trace()
+        pages = pool.allocate(2)
+        pool.register_prefix(hashes, pages)
+        got, _ = pool.match_prefix(prompt)
+        pool.ref(got)                                 # same trace: intra
+        assert pool.stats.prefix_hits == 2
+        assert pool.stats.cross_trace_hits == 0
+        pool.release(got)
+        pool.release(pages)
+        pool.begin_trace()
+        got, _ = pool.match_prefix(prompt)
+        pool.ref(got)                                 # next trace: cross
+        assert pool.stats.cross_trace_hits == 2
+        assert pool.stats.cross_trace_hit_tokens == 8
+        pool.unref(got)                               # failed admission
+        assert pool.stats.cross_trace_hits == 0
+        assert pool.stats.cross_trace_hit_tokens == 0
+        assert pool.stats.prefix_hits == 2            # trace-1 hits remain
+
+    @given(
+        seed=st.integers(0, 10_000),
+        n_ops=st.integers(5, 60),
+    )
+    @settings(max_examples=40, deadline=None)
+    def test_page_accounting_conserved_across_traces(self, seed, n_ops):
+        """Conservation law of the pool: every usable page is exactly
+        one of allocatable (``available()``) or live (refcount > 0) —
+        under random cross-trace sequences of admissions (match + ref +
+        allocate + register, scheduler-style), rollbacks, retirements
+        and the evictions (with orphan cleanup) they trigger."""
+        rng = np.random.default_rng(seed)
+        pool = PagePool(n_pages=7, page_size=4)
+        # A few prefix families so traces collide, extend and re-fill
+        # each other's chains.
+        fams = [np.arange(24, dtype=np.int32) + 100 * f for f in range(3)]
+        tenants = []
+
+        def check():
+            assert pool.available() + pool.live_pages == pool.usable_pages
+            # Every page's refcount equals the number of tenants naming
+            # it (shared prefix pages are held multiply — that is the
+            # point), and the garbage page is never handed out.
+            held = Counter(p for pages in tenants for p in pages)
+            assert 0 not in held
+            for p, k in held.items():
+                assert pool.refcount(p) == k
+            assert pool.live_pages == len(held)
+
+        pool.begin_trace()
+        for _ in range(n_ops):
+            op = rng.integers(4)
+            if op == 0:                               # trace boundary
+                pool.begin_trace()
+            elif op == 1:                             # admission attempt
+                fam = fams[rng.integers(len(fams))]
+                plen = int(rng.integers(1, 25))
+                n_tokens = int(rng.integers(1, 6))
+                prompt = fam[:plen]
+                need = pages_needed(plen, n_tokens, 4)
+                matched, hashes = pool.match_prefix(prompt)
+                pool.ref(matched)
+                fresh_needed = need - len(matched)
+                if fresh_needed > pool.available():
+                    pool.unref(matched)               # rollback path
+                else:
+                    fresh = pool.allocate(fresh_needed)
+                    pages = matched + fresh
+                    if len(hashes) > len(matched):
+                        pool.register_prefix(
+                            hashes[len(matched):],
+                            pages[len(matched):len(hashes)],
+                            parent=hashes[len(matched) - 1] if matched else None,
+                        )
+                    tenants.append(pages)
+            elif op >= 2 and tenants:                 # retirement
+                pool.release(tenants.pop(int(rng.integers(len(tenants)))))
+            check()
+        # Retire everything: the pool must account for every page again.
+        while tenants:
+            pool.release(tenants.pop())
+            check()
+        assert pool.available() == pool.usable_pages
 
     def test_chain_hashes_disambiguate_equal_pages(self):
         """Two prompts sharing page 1 CONTENT but not page 0 must not

@@ -1,0 +1,484 @@
+"""Persistent serving sessions: the device pool, the PagePool prefix
+index and the jit caches are built once per ``ServeSession`` and
+survive across traces — a system prompt cached by one trace is a
+cross-trace HIT in the next, with greedy tokens still bitwise-identical
+to per-request ``Engine.generate`` and no new compiles between traces.
+Also covers streaming delivery (``submit()`` handles: per-token
+callback + ``stream()`` iterator), session lifecycle edge cases
+(interleaved submission, empty-session ``step()``, reuse after a
+capacity ``ValueError``) and submission-time duplicate-rid rejection."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm
+from repro.serve import Engine, Request, Scheduler, ServeSession
+
+VOCAB = 512
+
+
+def _mk(arch="qwen2.5-3b", cache="float32"):
+    """Lossless cache dtype so prefix reuse (and thus cross-trace reuse)
+    is active."""
+    cfg = configs.get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, cache_dtype=cache)
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _shared_prefix_trace(rng, system, tails, n_tokens=4, rid0=0):
+    return [
+        Request(
+            prompt=np.concatenate(
+                [system, rng.integers(0, VOCAB, t).astype(np.int32)]
+            ),
+            n_tokens=n_tokens, rid=rid0 + i,
+        )
+        for i, t in enumerate(tails)
+    ]
+
+
+def _assert_engine_exact(eng, reqs, results):
+    for req, res in zip(reqs, results):
+        ref = eng.generate(req.prompt[None], n_tokens=req.n_tokens,
+                           request_ids=[res.rid])
+        np.testing.assert_array_equal(ref.tokens[0], res.tokens)
+
+
+class TestWarmSession:
+    def test_second_trace_hits_cross_trace_exact_no_new_compiles(self):
+        """The tentpole contract: a second serve() through the same
+        scheduler finds the first trace's system-prompt pages CACHED —
+        every request of trace 2 (including the FIRST one, which was
+        the cold miss before sessions) records cross-trace prefix hits
+        — while tokens stay Engine-exact and the jit caches do not grow
+        between the traces."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=4, max_len=64, page_size=8)
+        eng = Engine(cfg, params, max_len=64)
+        rng = np.random.default_rng(0)
+        system = rng.integers(0, VOCAB, 24).astype(np.int32)
+        t1 = _shared_prefix_trace(rng, system, [2, 3, 5, 2, 4, 3])
+        t2 = _shared_prefix_trace(rng, system, [4, 2, 3, 5, 2, 4], rid0=100)
+
+        r1 = sched.serve(t1)
+        s1 = sched.last_stats
+        c1 = sched.compile_counts()
+        r2 = sched.serve(t2)
+        s2 = sched.last_stats
+        c2 = sched.compile_counts()
+
+        assert s1.trace_index == 0 and s2.trace_index == 1
+        # Trace 1 is all intra-trace: the prefix was filled by its own
+        # first request.
+        assert s1.paging["prefix_hits"] > 0
+        assert s1.paging["cross_trace_hits"] == 0
+        assert [r.prefix_hit_tokens for r in r1][0] == 0
+        # Trace 2: every request (the first included) hits the pages the
+        # previous trace filled — 3 pages x 8 tokens of the 24-token
+        # system prompt, counted as cross-trace.
+        assert s2.paging["prefix_misses"] == 0
+        assert s2.paging["cross_trace_hits"] == 6 * 3
+        assert s2.paging["cross_trace_hit_tokens"] == 6 * 24
+        assert all(r.prefix_hit_tokens == 24 for r in r2)
+        # Warm trace compiled nothing new.
+        assert c1 == c2
+        # Scheduling/caching never changes numerics.
+        _assert_engine_exact(eng, t1, r1)
+        _assert_engine_exact(eng, t2, r2)
+        # The persistent pool was built once and is reported.
+        assert s1.pool_bytes == s2.pool_bytes > 0
+        assert sched.session() is sched.session()
+
+    def test_fresh_session_is_cold_but_shares_compiles(self):
+        """session(fresh=True) gets its own pool and prefix cache (cold
+        misses again) while reusing the scheduler's compiled programs."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        rng = np.random.default_rng(1)
+        system = rng.integers(0, VOCAB, 16).astype(np.int32)
+        sched.serve(_shared_prefix_trace(rng, system, [2, 3]))
+        before = sched.compile_counts()
+        fresh = sched.session(fresh=True)
+        assert isinstance(fresh, ServeSession)
+        assert fresh is not sched.session()
+        fresh.serve(_shared_prefix_trace(rng, system, [2, 3], rid0=50))
+        assert fresh.last_stats.paging["cross_trace_hits"] == 0
+        assert fresh.last_stats.paging["prefix_misses"] > 0
+        assert sched.compile_counts() == before   # same shapes, shared cache
+
+    def test_legacy_unpaged_session_persists_across_traces(self):
+        """paged=False rides the same session machinery: the monolithic
+        pool is built once, traces are numbered, tokens stay exact."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, paged=False)
+        eng = Engine(cfg, params, max_len=64)
+        rng = np.random.default_rng(2)
+        reqs = [Request(prompt=rng.integers(0, VOCAB, p).astype(np.int32),
+                        n_tokens=3, rid=i) for i, p in enumerate([4, 9, 6])]
+        r1 = sched.serve(reqs)
+        c1 = sched.compile_counts()
+        r2 = sched.serve(reqs)
+        assert sched.last_stats.trace_index == 1
+        assert sched.last_stats.paging is None
+        assert sched.compile_counts() == c1
+        _assert_engine_exact(eng, reqs, r1)
+        for a, b in zip(r1, r2):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+class TestStreaming:
+    def test_tokens_observable_as_produced(self):
+        """submit() returns a handle whose tokens appear one per step:
+        the on_token callback sees every token, in order, BEFORE the
+        trace completes; stream() yields exactly the generated tokens;
+        the final result equals Engine.generate."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        eng = Engine(cfg, params, max_len=64)
+        rng = np.random.default_rng(3)
+        pa = rng.integers(0, VOCAB, 9).astype(np.int32)
+        pb = rng.integers(0, VOCAB, 5).astype(np.int32)
+
+        seen = []
+        ha = sched.submit(Request(prompt=pa, n_tokens=6, rid=1),
+                          on_token=lambda h, t: seen.append((h.n_generated, t)))
+        hb = sched.submit(Request(prompt=pb, n_tokens=3, rid=2))
+        assert not ha.done and ha.n_generated == 0
+
+        streamed = []
+        progress = []
+        for tok in ha.stream():
+            streamed.append(tok)
+            progress.append(ha.n_generated)
+        # Callbacks deliver every token in production order, each AFTER
+        # its token was recorded (delivery is deferred to the end of the
+        # step, so the handle may be a token ahead) — and they start
+        # while the request is still mid-generation, not at completion.
+        ns = [n for n, _ in seen]
+        assert len(ns) == 6 and ns == sorted(ns)
+        assert all(n >= i + 1 for i, n in enumerate(ns))
+        assert ns[0] < 6                      # streaming, not end-of-trace
+        assert [t for _, t in seen] == streamed
+        # stream() never ran ahead of production.
+        assert progress[0] >= 1 and progress[-1] == 6
+        sched.drain()   # finish the co-submitted request
+        assert ha.done and hb.done
+        np.testing.assert_array_equal(ha.generated, np.asarray(streamed))
+        np.testing.assert_array_equal(
+            eng.generate(pa[None], n_tokens=6, request_ids=[1]).tokens[0],
+            ha.result.tokens,
+        )
+        np.testing.assert_array_equal(
+            eng.generate(pb[None], n_tokens=3, request_ids=[2]).tokens[0],
+            hb.result.tokens,
+        )
+        # Draining the session finalized the trace stats.
+        assert sched.last_stats.generated_tokens == 9
+
+    def test_eos_retires_streaming_handle(self):
+        """EOS keeps its retirement semantics under streaming: the
+        handle is done at the EOS token, the result is truncated there,
+        and the freed slot admits the queued request."""
+        cfg, params = _mk()
+        rng = np.random.default_rng(4)
+        prompt = rng.integers(0, VOCAB, 6).astype(np.int32)
+        free = Scheduler(cfg, params, max_slots=1, max_len=64).serve(
+            [Request(prompt=prompt, n_tokens=8)]
+        )[0]
+        eos = int(free.generated[2])
+        k = int(np.flatnonzero(free.generated == eos)[0])
+
+        sched = Scheduler(cfg, params, max_slots=1, max_len=64, eos_id=eos)
+        ha = sched.submit(Request(prompt=prompt, n_tokens=8, rid=0))
+        hb = sched.submit(Request(prompt=prompt[:3], n_tokens=2, rid=1))
+        got = list(ha.stream())
+        assert got == list(free.generated[:k + 1])
+        assert ha.done and got[-1] == eos
+        sched.drain()
+        assert hb.result.admitted_step == ha.result.finished_step
+
+    def test_callback_fires_from_step_for_interleaved_requests(self):
+        """Both handles' callbacks fire from the same step() calls —
+        tokens interleave across concurrently-decoding requests."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        rng = np.random.default_rng(5)
+        order = []
+        for rid in (0, 1):
+            sched.submit(
+                Request(prompt=rng.integers(0, VOCAB, 4 + rid).astype(np.int32),
+                        n_tokens=4, rid=rid),
+                on_token=lambda h, t: order.append(h.rid),
+            )
+        sched.drain()
+        # 2 admission tokens then 3 decode steps x 2 slots, interleaved.
+        assert sorted(order) == [0] * 4 + [1] * 4
+        assert order[2:] == [0, 1, 0, 1, 0, 1]
+
+
+class TestSessionLifecycle:
+    def test_empty_session_step_is_noop(self):
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64)
+        sess = sched.session()
+        assert sess.idle
+        assert sess.step() == 0
+        assert sess.step() == 0
+        assert sess.last_stats is None       # no trace ever ran
+        # and the session still serves normally afterwards
+        rng = np.random.default_rng(6)
+        res = sess.serve([Request(prompt=rng.integers(0, VOCAB, 5), n_tokens=2)])
+        assert res[0].tokens.size == 7
+
+    def test_empty_serve_lands_fresh_zero_stats(self):
+        """serve([]) must not leave a previous trace's stats in place —
+        the contract is that every call lands fresh ServeStats."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64)
+        rng = np.random.default_rng(15)
+        sched.serve([Request(prompt=rng.integers(0, VOCAB, 5), n_tokens=3)])
+        busy = sched.last_stats
+        assert busy.generated_tokens == 3
+        assert sched.serve([]) == []
+        empty = sched.last_stats
+        assert empty is not busy
+        assert empty.generated_tokens == 0 and empty.steps == 0
+        assert empty.trace_index == busy.trace_index + 1
+
+    def test_raising_on_token_callback_leaves_session_consistent(self):
+        """A user callback that raises interrupts the caller AFTER the
+        step's slot bookkeeping completed: resuming the session yields
+        the exact tokens an undisturbed run produces, and the
+        pre-empted callbacks fire on the next step."""
+        cfg, params = _mk()
+        rng = np.random.default_rng(16)
+        pa = rng.integers(0, VOCAB, 6).astype(np.int32)
+        pb = rng.integers(0, VOCAB, 4).astype(np.int32)
+        mk_reqs = lambda: [Request(prompt=pa, n_tokens=5, rid=0),
+                           Request(prompt=pb, n_tokens=5, rid=1)]
+        clean = {r.rid: r.tokens for r in Scheduler(
+            cfg, params, max_slots=2, max_len=64, page_size=8).serve(mk_reqs())}
+
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        sess = sched.session()
+        seen = []
+
+        def boom(h, t):
+            seen.append((h.rid, t))
+            if len(seen) == 3:
+                raise RuntimeError("user callback exploded")
+
+        ha = sess.submit(Request(prompt=pa, n_tokens=5, rid=0), on_token=boom)
+        hb = sess.submit(Request(prompt=pb, n_tokens=5, rid=1), on_token=boom)
+        with pytest.raises(RuntimeError, match="exploded"):
+            sess.drain()
+        sess.drain()                         # resume: session not corrupted
+        assert ha.done and hb.done
+        np.testing.assert_array_equal(ha.result.tokens, clean[0])
+        np.testing.assert_array_equal(hb.result.tokens, clean[1])
+        # Every token was eventually delivered to the callback, in order.
+        assert [t for rid, t in seen if rid == 0] == list(ha.generated)
+        assert [t for rid, t in seen if rid == 1] == list(hb.generated)
+
+    def test_empty_serve_mid_trace_does_not_finalize_live_trace(self):
+        """serve([]) while submit() handles are in flight must not
+        publish partial stats or reset the running trace's counters."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        sess = sched.session()
+        rng = np.random.default_rng(17)
+        h = sess.submit(Request(prompt=rng.integers(0, VOCAB, 6), n_tokens=6))
+        sess.step()
+        mid = sess.step_idx
+        assert sched.serve([]) == []
+        assert sess.last_stats is None          # nothing finalized
+        assert not sess.idle and sess.step_idx == mid
+        sess.drain()
+        assert h.done
+        assert sess.last_stats.trace_index == 0
+        assert sess.last_stats.generated_tokens == 6
+
+    def test_callback_submitting_follow_up_keeps_step_accounting_sane(self):
+        """An on_token callback that submits a follow-up request when
+        its handle retires (a streaming chain) starts a NEW trace from
+        the callback — step() must still report non-negative token
+        counts and both requests must complete."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        sess = sched.session()
+        rng = np.random.default_rng(18)
+        p2 = rng.integers(0, VOCAB, 4).astype(np.int32)
+        chained = []
+
+        def chain(h, t):
+            if h.done and not chained:
+                chained.append(
+                    sess.submit(Request(prompt=p2, n_tokens=2, rid=50))
+                )
+
+        sess.submit(Request(prompt=rng.integers(0, VOCAB, 6), n_tokens=3,
+                            rid=0), on_token=chain)
+        returns = []
+        while not sess.idle:
+            returns.append(sess.step())
+        assert all(r >= 0 for r in returns)
+        assert sum(r for r in returns) == 3 + 2
+        assert chained and chained[0].done
+
+    def test_interleaved_submit_joins_active_trace(self):
+        """A request submitted while the session is mid-trace joins the
+        SAME trace (admitted at the current step) and both requests stay
+        Engine-exact."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        eng = Engine(cfg, params, max_len=64)
+        rng = np.random.default_rng(7)
+        pa = rng.integers(0, VOCAB, 7).astype(np.int32)
+        pb = rng.integers(0, VOCAB, 4).astype(np.int32)
+        sess = sched.session()
+        ha = sess.submit(Request(prompt=pa, n_tokens=8, rid=0))
+        for _ in range(3):
+            sess.step()
+        mid_step = sess.step_idx
+        assert not sess.idle and not ha.done
+        hb = sess.submit(Request(prompt=pb, n_tokens=2, rid=1))
+        sess.drain()
+        assert hb.result.admitted_step >= mid_step
+        assert sess.last_stats.trace_index == 0   # one trace, not two
+        np.testing.assert_array_equal(
+            eng.generate(pa[None], n_tokens=8, request_ids=[0]).tokens[0],
+            ha.result.tokens,
+        )
+        np.testing.assert_array_equal(
+            eng.generate(pb[None], n_tokens=2, request_ids=[1]).tokens[0],
+            hb.result.tokens,
+        )
+
+    def test_session_usable_after_capacity_value_error(self):
+        """A rejected submission (max_len or page-pool capacity) leaves
+        the session untouched: nothing queued, later traces run."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=32, page_size=8,
+                          n_pages=4)               # 3 usable pages
+        sess = sched.session()
+        rng = np.random.default_rng(8)
+        with pytest.raises(ValueError, match="page-pool capacity"):
+            sess.submit(Request(prompt=rng.integers(0, VOCAB, 20), n_tokens=8))
+        with pytest.raises(ValueError, match="engine capacity"):
+            sess.submit(Request(prompt=rng.integers(0, VOCAB, 30), n_tokens=8))
+        assert sess.idle and not sess.queue
+        ok = Request(prompt=rng.integers(0, VOCAB, 10), n_tokens=3)
+        res = sess.serve([ok])
+        assert res[0].tokens.size == 13
+        # Mid-trace rejection also leaves the live request undisturbed.
+        h = sess.submit(Request(prompt=rng.integers(0, VOCAB, 6), n_tokens=4))
+        sess.step()
+        with pytest.raises(ValueError):
+            sess.submit(Request(prompt=rng.integers(0, VOCAB, 30), n_tokens=8))
+        sess.drain()
+        assert h.done and h.result.tokens.size == 10
+
+    def test_batch_serve_validates_before_enqueuing(self):
+        """serve() validates the WHOLE batch before touching session
+        state: one bad request rejects the trace atomically."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=32)
+        rng = np.random.default_rng(9)
+        good = Request(prompt=rng.integers(0, VOCAB, 4), n_tokens=2)
+        bad = Request(prompt=rng.integers(0, VOCAB, 30), n_tokens=8)
+        with pytest.raises(ValueError):
+            sched.serve([good, bad])
+        assert sched.session().idle and not sched.session().queue
+
+    def test_cross_trace_counters_on_serve_stats(self):
+        """ServeStats.paging distinguishes intra- from cross-trace hits
+        per trace: hits within a trace never count as cross, and the
+        per-trace delta resets between serve() calls."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64, page_size=8)
+        rng = np.random.default_rng(10)
+        system = rng.integers(0, VOCAB, 16).astype(np.int32)
+        sched.serve(_shared_prefix_trace(rng, system, [2, 3, 4]))
+        s1 = sched.last_stats
+        assert s1.paging["prefix_hits"] == 2 * 2    # 2 later reqs x 2 pages
+        assert s1.paging["cross_trace_hits"] == 0
+        sched.serve(_shared_prefix_trace(rng, system, [5, 2], rid0=10))
+        s2 = sched.last_stats
+        assert s2.paging["prefix_hits"] == 2 * 2
+        assert s2.paging["cross_trace_hits"] == 2 * 2
+        assert s2.paging["cross_trace_hit_tokens"] == 2 * 16
+        assert s2.paging["prefix_misses"] == 0
+
+
+class TestDuplicateRids:
+    def test_submit_time_duplicate_live_rid_raises(self):
+        """Two live requests must never share a rid: results are keyed
+        and PRNG streams derived by it.  The collision is caught AT
+        SUBMISSION — before the duplicate can corrupt anything — and the
+        rid becomes valid again once its owner retires."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64)
+        rng = np.random.default_rng(11)
+        p = rng.integers(0, VOCAB, 4).astype(np.int32)
+        sess = sched.session()
+        h = sess.submit(Request(prompt=p, n_tokens=2, rid=7))
+        with pytest.raises(ValueError, match="duplicate"):
+            sess.submit(Request(prompt=p, n_tokens=2, rid=7))
+        sess.drain()
+        assert h.done
+        h2 = sess.submit(Request(prompt=p, n_tokens=2, rid=7))   # reusable now
+        sess.drain()
+        np.testing.assert_array_equal(h.result.tokens, h2.result.tokens)
+
+    def test_auto_rids_skip_live_collisions(self):
+        """submit() without an explicit rid picks a fresh id that cannot
+        collide with any queued or decoding request."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64)
+        rng = np.random.default_rng(12)
+        sess = sched.session()
+        manual = sess.submit(
+            Request(prompt=rng.integers(0, VOCAB, 4), n_tokens=12, rid=0)
+        )
+        autos = [
+            sess.submit(Request(prompt=rng.integers(0, VOCAB, 4), n_tokens=2))
+            for _ in range(3)
+        ]
+        rids = [manual.rid] + [h.rid for h in autos]
+        assert len(set(rids)) == len(rids)
+        sess.drain()
+        assert all(h.done for h in autos)
+
+    def test_serve_default_rids_skip_live_submits(self):
+        """A default-rid serve() batch alongside an in-flight submit()
+        handle must not collide with its auto-rid: batch defaults count
+        up from 0 but skip live ids."""
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=64)
+        eng = Engine(cfg, params, max_len=64)
+        rng = np.random.default_rng(14)
+        p = rng.integers(0, VOCAB, 5).astype(np.int32)
+        h = sched.submit(Request(prompt=p, n_tokens=20))   # auto-rid 0, live
+        assert h.rid == 0
+        batch = [Request(prompt=rng.integers(0, VOCAB, 4), n_tokens=2)
+                 for _ in range(2)]
+        results = sched.serve(batch)                       # rids 1, 2
+        assert [r.rid for r in results] == [1, 2]
+        assert h.done                                      # drained together
+        np.testing.assert_array_equal(
+            eng.generate(p[None], n_tokens=20, request_ids=[0]).tokens[0],
+            h.result.tokens,
+        )
+
+    def test_batch_duplicate_message_unchanged(self):
+        cfg, params = _mk()
+        sched = Scheduler(cfg, params, max_slots=2, max_len=32)
+        rng = np.random.default_rng(13)
+        p = rng.integers(0, VOCAB, 4).astype(np.int32)
+        with pytest.raises(ValueError, match="duplicate request ids"):
+            sched.serve([Request(prompt=p, n_tokens=2, rid=1),
+                         Request(prompt=p, n_tokens=2)])  # defaults to rid 1
