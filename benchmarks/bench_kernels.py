@@ -1,8 +1,20 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
 On CPU these measure the XLA lowering of the kernel body; on TPU the same
-entry points run the compiled Pallas kernels."""
+entry points run the compiled Pallas kernels.
+
+Persists ``BENCH_kernels.json`` at the repo root (one record per kernel
+size, plus the composed FP-DCIM matmul accuracy figure); CI regenerates
+it with ``--smoke`` on every PR::
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels --smoke
+"""
 from __future__ import annotations
 
+import argparse
+import pathlib
+import platform
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -10,36 +22,55 @@ from repro.kernels import ops, ref
 
 from .common import emit, time_fn
 
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
-def main():
+# (full, smoke) problem sizes per kernel.
+_PARETO_P = ((128, 512, 1024), (128, 256))
+_MVM_MKN = (((128, 512, 128), (256, 2048, 256)), ((64, 256, 64),))
+_PREALIGN = (((64, 16, 64), (256, 32, 128)), ((64, 16, 64),))
+
+
+def run(smoke: bool) -> dict:
     rng = np.random.default_rng(0)
+    kernels: dict = {}
 
     # pareto_rank: P x P dominance
-    for P in (128, 512, 1024):
+    for P in _PARETO_P[smoke]:
         F = jnp.asarray(rng.normal(size=(P, 4)).astype(np.float32))
         us_k = time_fn(ops.dominance_matrix, F)
         us_r = time_fn(ref.dominance_matrix_ref, F)
+        pairs = round(P * P / us_k * 1e6, 1)
         emit(f"pareto_rank.P{P}", us_k,
-             f"ref_us={us_r:.1f} pairs_per_s={P * P / us_k * 1e6:.3g}")
+             f"ref_us={us_r:.1f} pairs_per_s={pairs:.3g}")
+        kernels[f"pareto_rank.P{P}"] = {
+            "us": round(us_k, 1), "ref_us": round(us_r, 1),
+            "pairs_per_s": pairs,
+        }
 
     # dcim_mvm: bit-serial exact int matmul
-    for M, K, N in ((128, 512, 128), (256, 2048, 256)):
+    for M, K, N in _MVM_MKN[smoke]:
         x = jnp.asarray(rng.integers(-128, 128, (M, K)).astype(np.int32))
         w = jnp.asarray(rng.integers(-128, 128, (K, N)).astype(np.int32))
         us_k = time_fn(lambda a, b: ops.dcim_mvm(a, b, B_x=8, B_w=8, k=4), x, w)
         us_r = time_fn(ref.dcim_mvm_ref, x, w)
         macs = M * K * N
+        gmacs = round(macs / us_k * 1e-3, 2)
         emit(f"dcim_mvm.{M}x{K}x{N}", us_k,
-             f"ref_us={us_r:.1f} gmacs_per_s={macs / us_k * 1e-3:.2f}")
+             f"ref_us={us_r:.1f} gmacs_per_s={gmacs:.2f}")
+        kernels[f"dcim_mvm.{M}x{K}x{N}"] = {
+            "us": round(us_k, 1), "ref_us": round(us_r, 1),
+            "gmacs_per_s": gmacs,
+        }
 
     # fp_prealign
-    for shape in ((64, 16, 64), (256, 32, 128)):
+    for shape in _PREALIGN[smoke]:
         x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
         us_k = time_fn(
             lambda a: ops._pre.fp_prealign_pallas(a, B_M=8), x)
         us_r = time_fn(lambda a: ref.fp_prealign_ref(a, B_M=8), x)
-        emit(f"fp_prealign.{'x'.join(map(str, shape))}", us_k,
-             f"ref_us={us_r:.1f}")
+        name = f"fp_prealign.{'x'.join(map(str, shape))}"
+        emit(name, us_k, f"ref_us={us_r:.1f}")
+        kernels[name] = {"us": round(us_k, 1), "ref_us": round(us_r, 1)}
 
     # composed FP-DCIM matmul vs f32 matmul accuracy+speed
     x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))
@@ -47,9 +78,36 @@ def main():
     us_k = time_fn(lambda a, b: ops.dcim_fp_matmul(a, b, H=64, B_M=8, B_w=8, k=4), x, w)
     got = np.asarray(ops.dcim_fp_matmul(x, w, H=64, B_M=8, B_w=8, k=4))
     want = np.asarray(ref.fp_matmul_f32_ref(x, w))
-    rel = np.median(np.abs(got - want) / np.maximum(np.abs(want), 1.0))
+    rel = float(np.median(np.abs(got - want) / np.maximum(np.abs(want), 1.0)))
     emit("dcim_fp_matmul.64x256x64", us_k, f"median_rel_err={rel:.2e}")
+    kernels["dcim_fp_matmul.64x256x64"] = {
+        "us": round(us_k, 1), "median_rel_err": rel,
+    }
+
+    return {
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "smoke": bool(smoke),
+        "kernels": kernels,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (smallest problem sizes only)")
+    ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_kernels.json"))
+    args = ap.parse_args()
+
+    rec = run(args.smoke)
+
+    from repro.core.results import dump_json
+
+    path = dump_json(args.out, rec)
+    print(f"{len(rec['kernels'])} kernel size(s) "
+          f"[{rec['backend']}] -> {path}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

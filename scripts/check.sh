@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Local equivalent of .github/workflows/ci.yml: the tier-1 test command,
-# perf record regeneration (BENCH_dse.json / BENCH_serve.json — the
-# latter now includes the warm-session trace), two single-cell dry-runs
+# the program-contract lint (results/lint.json), perf record
+# regeneration (BENCH_dse.json / BENCH_serve.json / BENCH_kernels.json —
+# bench_serve includes the warm-session trace), two single-cell dry-runs
 # through the results store (the 2x16x16 train cell asserts the SPMD
 # partitioner emits no involuntary-rematerialization warnings), and the
 # docs-snippet check (every python block in README/docs must execute).
@@ -14,8 +15,20 @@ python -m pytest -x -q -m "not slow" "$@"
 if [ "$#" -gt 0 ]; then
   python -m pytest -x -q -m "not slow" tests/test_serve_session.py
 fi
+# Static toolchain (ruff/mypy) when installed — CI always installs the
+# [lint] extra, so local runs without it only skip the style layer.
+if command -v ruff >/dev/null 2>&1; then
+  ruff check src tests benchmarks scripts
+fi
+if command -v mypy >/dev/null 2>&1; then
+  mypy
+fi
+# Program-contract lint: donation/transfers/recompile/collectives/pallas
+# over every registered contract; hard gate (nonzero on any error).
+PYTHONPATH=src python -m repro.analysis.lint --all
 PYTHONPATH=src python -m benchmarks.bench_dse --smoke
 PYTHONPATH=src python -m benchmarks.bench_serve --smoke
+PYTHONPATH=src python -m benchmarks.bench_kernels --smoke
 PYTHONPATH=src python -m repro.launch.dryrun \
   --arch qwen2.5-3b --shape decode_32k --mesh single \
   --out results/dryrun-ci --force --fail-on-remat

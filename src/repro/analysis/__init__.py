@@ -1,0 +1,41 @@
+"""Program-contract linter over jaxprs and compiled HLO.
+
+Hot programs declare :class:`~repro.analysis.registry.Contract` objects
+at their jit sites; pluggable checks (donation, transfers, recompile,
+collectives, pallas) verify them from artifacts alone.  See
+``docs/analysis.md`` and ``python -m repro.analysis.lint --help``.
+
+This package root stays import-light: contract *declaration* must be
+free for the hot modules, so the check and contract modules load only
+on demand (:func:`load_builtin_checks`, ``contracts.load_contracts``).
+"""
+from .findings import Finding, Report  # noqa: F401
+from .registry import (  # noqa: F401
+    CHECKS,
+    CONTRACTS,
+    Built,
+    CompiledUnit,
+    Contract,
+    ContractSkip,
+    PallasTrace,
+    Replay,
+    register_check,
+    register_contract,
+)
+
+_CHECK_MODULES = (
+    "check_donation",
+    "check_transfers",
+    "check_recompile",
+    "check_collectives",
+    "check_pallas",
+)
+
+
+def load_builtin_checks() -> None:
+    """Import every built-in check module (registration is a decorator
+    side effect)."""
+    import importlib
+
+    for mod in _CHECK_MODULES:
+        importlib.import_module(f"{__name__}.{mod}")

@@ -1,0 +1,55 @@
+"""Collective/remat lint: no budget-blowing collectives in compiled SPMD
+programs.
+
+The SPMD partitioner's failure mode for a missing/contradictory sharding
+annotation is an *involuntary rematerialization*: it all-gathers the
+full replicated operand (every device materializes the global array)
+instead of keeping it partitioned.  In the compiled module that
+manifests as an all-gather whose per-device output is the global shape —
+orders of magnitude over the halo-exchange-sized collectives a correct
+partition needs.
+
+Each compiled unit declares per-collective byte budgets
+(``collective_budget``: opcode -> max per-device output bytes, 0 forbids
+the opcode).  Sites come from the trip-count-aware walk in
+``launch.hlo_analysis.collective_sites`` via
+``analysis.remat.oversized_collectives``, so a per-step all-gather
+inside a scanned layer loop is reported with its real repeat count.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .findings import Finding, error, info
+from .registry import Built, register_check
+from .remat import oversized_collectives
+
+CHECK = "collectives"
+
+
+@register_check(CHECK)
+def run(contract: str, built: Built) -> List[Finding]:
+    findings: List[Finding] = []
+    for unit in built.compiled:
+        if unit.collective_budget is None:
+            continue
+        flagged = oversized_collectives(unit.hlo, unit.collective_budget)
+        for site in flagged:
+            verb = ("forbidden collective" if site["budget"] == 0
+                    else "oversized collective")
+            findings.append(error(
+                CHECK, contract,
+                f"{unit.label}: {verb} {site['collective']} "
+                f"({site['bytes']} bytes/device > budget "
+                f"{site['budget']}, x{site['trip_mult']:g} loop trips) "
+                f"at {site['computation']}/{site['op']} — likely an "
+                f"involuntary rematerialization of a replicated operand",
+                unit=unit.label, site=site,
+            ))
+        if not flagged:
+            findings.append(info(
+                CHECK, contract,
+                f"{unit.label}: all collective sites within budget",
+                unit=unit.label,
+            ))
+    return findings

@@ -1,0 +1,152 @@
+"""Pallas kernel lint: BlockSpec tiling, grid coverage, interpreter
+fallbacks — statically, from the traced jaxpr.
+
+The contract traces each kernel entry point (``jax.make_jaxpr``); the
+check digs the ``pallas_call`` equations out (``pallas_call_specs``) and
+verifies, per operand:
+
+* **lane alignment** — the last block dim must be a multiple of 128
+  (the TPU lane count) unless the block spans the full array dim (a
+  sub-lane-sized array is padded into one tile);
+* **sublane alignment** — the second-to-last block dim must be a
+  multiple of the dtype's min sublane tile (f32: 8, bf16: 16,
+  int8/fp8: 32), same full-dim escape;
+* **grid coverage** — evaluating the BlockSpec's index map at the grid
+  corners must cover the whole array: a grid that stops short silently
+  computes on a prefix (the classic ``cdiv``-vs-``//`` bug);
+* **interpreter fallback** — ``interpret=True`` is an error on TPU (the
+  kernel never compiles) and an ``info`` elsewhere (expected on CPU).
+
+Everything is derived from the trace — no kernel is executed.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List
+
+import jax
+import numpy as np
+
+from .findings import Finding, error, info, warning
+from .jaxpr_tools import eval_index_map, pallas_call_specs
+from .registry import Built, register_check
+
+CHECK = "pallas"
+
+LANE = 128
+_MIN_SUBLANE = {1: 32, 2: 16, 4: 8, 8: 8}     # itemsize -> min sublane tile
+
+
+def _itemsize(dtype_str: str) -> int:
+    try:
+        return int(np.dtype(dtype_str).itemsize)
+    except TypeError:
+        return 1    # fp8/int4 custom dtypes: 1-byte class
+
+
+def _check_operand(contract, kernel, which, idx, op, grid) -> List[Finding]:
+    findings: List[Finding] = []
+    block = op["block_shape"]
+    shape = op["array_shape"]
+    label = f"{kernel}[{which}{idx}]"
+
+    # --- tile alignment ---------------------------------------------------
+    if block and block[-1] is not None and shape:
+        b_last, a_last = block[-1], shape[-1]
+        if b_last != a_last and b_last % LANE:
+            findings.append(error(
+                CHECK, contract,
+                f"{label}: last block dim {b_last} is neither the full "
+                f"array dim ({a_last}) nor a multiple of the {LANE}-wide "
+                f"lane tile",
+                kernel=kernel, operand=idx, block=list(block),
+                array=list(shape),
+            ))
+    if len(block) >= 2 and block[-2] is not None and len(shape) >= 2:
+        min_sub = _MIN_SUBLANE.get(_itemsize(op["dtype"]), 8)
+        b_sub, a_sub = block[-2], shape[-2]
+        if b_sub != a_sub and b_sub % min_sub:
+            findings.append(error(
+                CHECK, contract,
+                f"{label}: sublane block dim {b_sub} is neither the full "
+                f"array dim ({a_sub}) nor a multiple of the "
+                f"{op['dtype']} min sublane tile ({min_sub})",
+                kernel=kernel, operand=idx, block=list(block),
+                array=list(shape),
+            ))
+
+    # --- grid coverage ----------------------------------------------------
+    if grid and all(b is not None for b in block):
+        try:
+            corners = itertools.product(*[(0, g - 1) for g in grid])
+            covered = [0] * len(block)
+            for corner in corners:
+                out = eval_index_map(op["index_map_jaxpr"], corner)
+                for d in range(len(block)):
+                    covered[d] = max(covered[d], (out[d] + 1) * block[d])
+            short = [d for d in range(len(shape)) if covered[d] < shape[d]]
+            if short:
+                findings.append(error(
+                    CHECK, contract,
+                    f"{label}: grid {grid} covers only "
+                    f"{[covered[d] for d in short]} of array dims "
+                    f"{[shape[d] for d in short]} (dims {short}) — part "
+                    f"of the array is never visited",
+                    kernel=kernel, operand=idx, grid=list(grid),
+                    covered=covered, array=list(shape),
+                ))
+        except Exception as e:   # un-evaluable index map: report, don't crash
+            findings.append(warning(
+                CHECK, contract,
+                f"{label}: could not evaluate BlockSpec index map "
+                f"({type(e).__name__}: {e})",
+                kernel=kernel, operand=idx,
+            ))
+    return findings
+
+
+@register_check(CHECK)
+def run(contract: str, built: Built) -> List[Finding]:
+    findings: List[Finding] = []
+    backend = jax.default_backend()
+    for trace in built.pallas:
+        specs = pallas_call_specs(trace.closed_jaxpr)
+        if not specs:
+            findings.append(warning(
+                CHECK, contract,
+                f"{trace.label}: no pallas_call found in the trace",
+                kernel=trace.label,
+            ))
+            continue
+        for spec in specs:
+            ops = spec["operands"]
+            # inputs and outputs are interleaved in block_mappings order;
+            # index only — the distinction does not change the rules
+            for idx, op in enumerate(ops):
+                findings.extend(_check_operand(
+                    contract, trace.label, "operand", idx, op, spec["grid"]
+                ))
+            if spec["interpret"]:
+                if backend == "tpu":
+                    findings.append(error(
+                        CHECK, contract,
+                        f"{trace.label}: pallas_call traced with "
+                        f"interpret=True on TPU — the kernel never "
+                        f"compiles",
+                        kernel=trace.label,
+                    ))
+                else:
+                    findings.append(info(
+                        CHECK, contract,
+                        f"{trace.label}: interpreter mode on "
+                        f"{backend} (expected off-TPU)",
+                        kernel=trace.label,
+                    ))
+        if trace.interpret_fallback:
+            findings.append(info(
+                CHECK, contract,
+                f"{trace.label}: public wrapper auto-falls back to "
+                f"interpreter/XLA on {backend}",
+                kernel=trace.label,
+            ))
+    return findings

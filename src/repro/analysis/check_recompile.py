@@ -1,0 +1,83 @@
+"""Recompile-hazard lint: a replayed host loop must hit the jit caches
+it promised.
+
+The contract replays a realistic trace against its real jitted programs
+while recording the canonical abstract signature of every call
+(``jaxpr_tools.canonical_signature`` — shape, dtype AND weak-type bit
+per leaf).  Three detectors:
+
+* **signature budget** — more DISTINCT signatures for a program label
+  than its declared ``max_programs`` means the host loop retraces where
+  it promised cache hits;
+* **weak-type drift** — two signatures that collide once the weak-type
+  bits are erased differ *only* in weak typing: some call passed a
+  Python scalar where another passed a committed array.  This is the
+  classic silent cache-doubler, so it is attributed explicitly;
+* **live cache sizes** — when the contract snapshots real jit cache
+  counters (e.g. ``Scheduler.compile_counts()``), they are compared
+  against the declared budget.  This catches retraces the signature
+  recorder cannot see (e.g. different static argnums).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List
+
+from .findings import Finding, error
+from .jaxpr_tools import strip_weak
+from .registry import Built, register_check
+
+CHECK = "recompile"
+
+
+@register_check(CHECK)
+def run(contract: str, built: Built) -> List[Finding]:
+    findings: List[Finding] = []
+    replay = built.replay
+    if replay is None:
+        return findings
+
+    by_label: Dict[str, List[str]] = defaultdict(list)
+    for label, sig in replay.signatures:
+        by_label[label].append(sig)
+
+    for label, sigs in sorted(by_label.items()):
+        distinct = list(dict.fromkeys(sigs))
+
+        # weak-type drift: report before the budget so the root cause
+        # leads even when both fire
+        buckets: Dict[str, List[str]] = defaultdict(list)
+        for sig in distinct:
+            buckets[strip_weak(sig)].append(sig)
+        drifted = {k: v for k, v in buckets.items() if len(v) > 1}
+        if drifted:
+            findings.append(error(
+                CHECK, contract,
+                f"{label}: weak-type drift — {len(drifted)} signature "
+                f"group(s) differ only in weak typing (a Python scalar "
+                f"vs a committed array at the same argument)",
+                program=label,
+                groups={k: v for k, v in list(drifted.items())[:4]},
+            ))
+
+        budget = replay.max_programs.get(label)
+        if budget is not None and len(distinct) > budget:
+            findings.append(error(
+                CHECK, contract,
+                f"{label}: {len(distinct)} distinct abstract signatures "
+                f"over the replayed trace, budget {budget} — the host "
+                f"loop retraces where it promised cache hits",
+                program=label, budget=budget,
+                signatures=distinct[:8],
+            ))
+
+    for key, budget in sorted(replay.live_budget.items()):
+        live = replay.live_counts.get(key)
+        if live is not None and live > budget:
+            findings.append(error(
+                CHECK, contract,
+                f"jit cache {key!r} holds {live} compiled programs, "
+                f"budget {budget}",
+                cache=key, live=live, budget=budget,
+            ))
+    return findings

@@ -1,0 +1,62 @@
+"""Transfer/host-sync lint: the hot path must not transfer implicitly.
+
+Two detectors:
+
+* **replay under guard** — the contract's ``hot`` callable (e.g. a
+  miniature ``ServeSession`` submit+drain) runs under
+  ``jax.transfer_guard("disallow")``.  Any *implicit* host-to-device
+  transfer — a raw numpy array or scalar handed straight to a jitted
+  program, a numpy operand folded into a jax op — raises, and the raise
+  becomes an ``error`` finding.  Explicit conversions
+  (``jnp.asarray`` / ``device_put``) pass: the point is not "no
+  transfers" but "every transfer is a visible, deliberate call site".
+* **jaxpr walk** — the contract's traced hot programs must not contain
+  host-callback or infeed/outfeed primitives: those synchronize with
+  the host *inside* the program, stalling every step.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+
+from .findings import Finding, error
+from .jaxpr_tools import iter_eqns
+from .registry import Built, register_check
+
+CHECK = "transfers"
+
+_HOST_SYNC_PRIMITIVES = {
+    "pure_callback", "io_callback", "debug_callback", "callback",
+    "infeed", "outfeed", "host_local_array_to_global_array",
+}
+
+
+@register_check(CHECK)
+def run(contract: str, built: Built) -> List[Finding]:
+    findings: List[Finding] = []
+    if built.hot is not None:
+        try:
+            with jax.transfer_guard("disallow"):
+                built.hot()
+        except Exception as e:  # the guard raises XlaRuntimeError
+            findings.append(error(
+                CHECK, contract,
+                f"{built.hot_label}: implicit transfer under "
+                f"transfer_guard('disallow') — convert at the call site "
+                f"(jnp.asarray / device_put) instead",
+                exception=f"{type(e).__name__}: {e}"[:500],
+            ))
+    for label, closed_jaxpr in getattr(built, "hot_jaxprs", []) or []:
+        hits = sorted({
+            eqn.primitive.name for eqn in iter_eqns(closed_jaxpr)
+            if eqn.primitive.name in _HOST_SYNC_PRIMITIVES
+        })
+        if hits:
+            findings.append(error(
+                CHECK, contract,
+                f"{label}: host-sync primitive(s) {hits} inside the "
+                f"compiled hot program",
+                program=label, primitives=hits,
+            ))
+    return findings

@@ -1,0 +1,100 @@
+"""Contract loading + the cross-module SPMD contract.
+
+Per-program contracts live next to their jit sites (``serve.scheduler``,
+``models.lm``, ``train.train_step``, ``core.nsga2``, ``kernels.ops``) —
+importing those modules registers them.  The data-parallel training
+contract lives here because it spans train_step + dist sharding and must
+NOT import ``launch.dryrun`` (whose module preamble forces a 512-device
+host platform).
+
+The lint CLI forces an 8-device CPU host platform before jax
+initializes, so the SPMD contract compiles a real multi-device module;
+in an already-initialized single-device process it skips with an
+``info`` finding.
+"""
+from __future__ import annotations
+
+import importlib
+
+from .registry import Built, ContractSkip, register_contract
+
+# Importing these modules registers their contracts (decorator side
+# effect at module scope).
+CONTRACT_MODULES = (
+    "repro.serve.scheduler",
+    "repro.models.lm",
+    "repro.train.train_step",
+    "repro.core.nsga2",
+    "repro.kernels.ops",
+)
+
+
+def load_contracts() -> None:
+    for mod in CONTRACT_MODULES:
+        importlib.import_module(mod)
+
+
+@register_contract(
+    "dist.train_dp",
+    checks=("collectives", "donation"),
+    description="data-parallel train step on a dp mesh: donated "
+                "replicated state, gradient sync must stay all-reduce — "
+                "no full-operand all-gather (involuntary remat), no "
+                "all-to-all",
+)
+def _build_train_dp() -> Built:
+    import jax
+
+    if jax.device_count() < 2:
+        raise ContractSkip(
+            "needs >= 2 devices; run via `python -m repro.analysis.lint` "
+            "(forces a multi-device CPU host platform)"
+        )
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.optim import get_optimizer
+    from repro.train.train_step import init_state, make_train_step
+
+    from .jaxpr_tools import compile_unit
+
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    opt = get_optimizer("adamw", 1e-3)
+    state = init_state(jax.random.PRNGKey(0), cfg, opt)
+    step = make_train_step(cfg, opt)
+
+    mesh = Mesh(np.array(jax.devices()), ("dp",))
+    repl = NamedSharding(mesh, P())
+    dp_rows = NamedSharding(mesh, P("dp"))
+
+    B, S = jax.device_count(), 16
+    batch = {
+        "tokens": jnp.zeros((B, S), jnp.int32),
+        "targets": jnp.zeros((B, S), jnp.int32),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+    }
+    state_sh = jax.tree.map(lambda _: repl, state)
+    batch_sh = jax.tree.map(lambda _: dp_rows, batch)
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+        donate_argnums=(0,),
+    )
+    unit = compile_unit(
+        "train_dp_step", jitted, (state, batch),
+        donate_argnums=(0,),
+        # replicated state: per-device parameter shapes == global shapes
+        shard_divisors=(1,),
+        collective_budget={
+            # gradient sync is all-reduce (unbudgeted here); a FULL
+            # all-gather of a replicated operand is the involuntary-remat
+            # signature — nothing in a clean dp step should gather more
+            # than control scalars
+            "all-gather": 1 << 16,
+            "all-to-all": 0,
+        },
+    )
+    return Built(compiled=[unit])

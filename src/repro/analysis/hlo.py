@@ -1,0 +1,58 @@
+"""HLO-text parsing for the donation check.
+
+XLA records accepted donations in the module header::
+
+    HloModule jit_step, input_output_alias={ {0}: (0, {}, may-alias), ... }
+
+A ``donate_argnums`` buffer that XLA could NOT alias (shape/dtype
+mismatch with every output, or a sharding change) is silently dropped —
+the program still runs, it just copies the biggest buffer of the hot
+loop every step.  ``aliased_params`` recovers which entry parameters
+actually aliased an output, and ``entry_param_bytes`` their byte sizes,
+so the check can match the contract's donated-leaf inventory against
+what the compiler kept.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+from repro.launch.hlo_analysis import HloAnalyzer, _shape_bytes
+
+# one alias entry: {output_index}: (param_number, {param_index}, kind)
+_ALIAS_ENTRY = re.compile(
+    r"\{[\d,\s]*\}:\s*\((\d+),\s*\{[\d,\s]*\},\s*(?:may|must)-alias\)"
+)
+
+
+def aliased_params(hlo_text: str) -> List[int]:
+    """Entry-parameter numbers that alias an output (with multiplicity:
+    a tuple parameter aliasing several outputs appears once per entry)."""
+    header = ""
+    for line in hlo_text.splitlines():
+        if "input_output_alias=" in line:
+            header = line.split("input_output_alias=", 1)[1]
+            break
+    return [int(m.group(1)) for m in _ALIAS_ENTRY.finditer(header)]
+
+
+def entry_param_bytes(hlo_text: str) -> Dict[int, int]:
+    """Byte size of every entry-computation parameter, by number."""
+    an = HloAnalyzer(hlo_text)
+    out: Dict[int, int] = {}
+    if an.entry is None:
+        return out
+    for op in an.comps[an.entry].ops:
+        if op.opcode != "parameter":
+            continue
+        m = re.match(r"\s*(\d+)\)", op.rest)
+        if m:
+            out[int(m.group(1))] = _shape_bytes(op.shape)
+    return out
+
+
+def aliased_param_bytes(hlo_text: str) -> List[int]:
+    """Byte sizes of the parameters that aliased an output — the
+    multiset the donation check consumes."""
+    sizes = entry_param_bytes(hlo_text)
+    return [sizes[p] for p in aliased_params(hlo_text) if p in sizes]

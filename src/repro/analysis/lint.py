@@ -1,0 +1,143 @@
+"""Program-contract lint runner + CLI.
+
+Usage::
+
+  PYTHONPATH=src python -m repro.analysis.lint --all
+  PYTHONPATH=src python -m repro.analysis.lint --check donation --check pallas
+  PYTHONPATH=src python -m repro.analysis.lint --list
+
+``--all`` builds every registered contract at its miniature
+configuration, runs the checks each contract declares, writes
+``results/lint.json`` and exits nonzero on any ``error`` finding.
+"""
+import os
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    # Give the SPMD contract a real multi-device platform.  Must happen
+    # before jax initializes; only when executed as a CLI — importing
+    # this module from an already-running process never mutates its env.
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+import json
+import pathlib
+import time
+from typing import List, Optional, Sequence
+
+from . import CHECKS, CONTRACTS, load_builtin_checks
+from .findings import Finding, Report
+from .registry import ContractSkip
+
+
+def _load_all() -> None:
+    from . import contracts
+
+    load_builtin_checks()
+    contracts.load_contracts()
+
+
+def run_lint(
+    checks: Optional[Sequence[str]] = None,
+    contracts: Optional[Sequence[str]] = None,
+) -> Report:
+    """Build the selected contracts and run their selected checks."""
+    import jax
+
+    _load_all()
+    want_checks = set(checks) if checks else set(CHECKS)
+    want_contracts = set(contracts) if contracts else set(CONTRACTS)
+    unknown = (want_checks - set(CHECKS)) | (want_contracts - set(CONTRACTS))
+    if unknown:
+        raise ValueError(
+            f"unknown checks/contracts: {sorted(unknown)}; "
+            f"known checks {sorted(CHECKS)}, contracts {sorted(CONTRACTS)}"
+        )
+
+    report = Report(backend=jax.default_backend())
+    for name in sorted(want_contracts):
+        contract = CONTRACTS[name]
+        selected = [c for c in contract.checks if c in want_checks]
+        if not selected:
+            continue
+        try:
+            built = contract.build()
+        except ContractSkip as e:
+            report.findings.append(Finding(
+                "contract", name, "info", f"skipped: {e}"))
+            continue
+        except Exception as e:
+            # A contract that cannot even build is a lint failure: the
+            # miniature program it describes no longer constructs.
+            report.findings.append(Finding(
+                "contract", name, "error",
+                f"contract build failed: {type(e).__name__}: {e}"))
+            continue
+        report.contracts_executed.append(name)
+        for check in selected:
+            try:
+                found = CHECKS[check](name, built)
+            except Exception as e:
+                found = [Finding(
+                    check, name, "error",
+                    f"check crashed: {type(e).__name__}: {e}")]
+            report.checks_executed.append(check)
+            report.extend(found)
+    return report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="static program-contract lint over jaxprs + compiled HLO",
+    )
+    ap.add_argument("--all", action="store_true",
+                    help="run every check on every contract")
+    ap.add_argument("--check", action="append", default=[],
+                    help="run only this check (repeatable)")
+    ap.add_argument("--contract", action="append", default=[],
+                    help="run only this contract (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered checks and contracts, then exit")
+    ap.add_argument("--out", default="results/lint.json",
+                    help="where to write the JSON report")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        _load_all()
+        print("checks:")
+        for name in sorted(CHECKS):
+            print(f"  {name}")
+        print("contracts:")
+        for name, c in sorted(CONTRACTS.items()):
+            print(f"  {name} [{', '.join(c.checks)}] — {c.description}")
+        return 0
+    if not (args.all or args.check or args.contract):
+        ap.print_help()
+        return 2
+
+    t0 = time.time()
+    report = run_lint(
+        checks=args.check or None, contracts=args.contract or None
+    )
+    payload = report.to_json()
+    payload["wall_s"] = round(time.time() - t0, 2)
+    out = pathlib.Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+    for f in report.findings:
+        print(f"[{f.severity:7s}] {f.check}/{f.contract}: {f.message}")
+    summary = report.summary()
+    print(
+        f"lint: {len(report.findings)} finding(s) "
+        f"({summary['error']} error, {summary['warning']} warning, "
+        f"{summary['info']} info) over "
+        f"{len(set(report.contracts_executed))} contract(s), "
+        f"{len(set(report.checks_executed))} distinct check(s); "
+        f"report -> {out}"
+    )
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,126 @@
+"""Pluggable registries for lint checks and program contracts.
+
+A **contract** is declared next to the jit site it describes (scheduler,
+``lm.prefill_paged``, ``train_step``, ``nsga2.run_batched``, the Pallas
+kernels): a build function that constructs the program at a miniature
+configuration and returns the artifacts the checks need — compiled HLO
+with the declared donated buffers, a hot callable to replay under a
+transfer guard, recorded abstract call signatures, traced Pallas jaxprs.
+Checks never import the modules they verify; they see only
+:class:`Built`.
+
+A **check** is a function ``(contract_name, Built) -> [Finding]``
+registered under a short name.  The lint runner intersects each
+contract's declared ``checks`` with the requested set, so a contract is
+only exercised by checks it opted into.
+
+This module is deliberately import-light (stdlib only): hot modules
+import it at module scope to declare their contracts, and must not pay
+for — or cycle into — jax-level helpers, which live in
+``analysis.jaxpr_tools`` / ``analysis.hlo``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+
+class ContractSkip(Exception):
+    """Raised by a contract build to opt out at runtime (e.g. a mesh
+    contract on a single-device host).  Reported as an ``info`` finding,
+    never a failure."""
+
+
+@dataclasses.dataclass
+class CompiledUnit:
+    """One lowered+compiled program, for artifact-level (HLO) checks.
+
+    ``donated`` describes the buffers the call site donates — dicts with
+    ``path``/``shape``/``dtype``/``nbytes`` (see
+    ``jaxpr_tools.donated_leaves``).  ``shard_divisors`` widens the
+    donation byte-match for SPMD programs whose post-partition parameter
+    shapes are the global shape divided across devices."""
+    label: str
+    hlo: str                                        # compiled.as_text()
+    donated: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    donate_min_bytes: int = 0
+    shard_divisors: Tuple[int, ...] = (1,)
+    compile_warnings: List[str] = dataclasses.field(default_factory=list)
+    # per-collective byte budgets, e.g. {"all-gather": 1 << 20}; 0 forbids
+    collective_budget: Optional[Dict[str, int]] = None
+
+
+@dataclasses.dataclass
+class Replay:
+    """Abstract call signatures recorded while replaying a host loop
+    against the real jitted programs (see the serve contract)."""
+    # (program label, canonical abstract signature) per recorded call
+    signatures: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    # per-label budget of DISTINCT signatures; a label absent here is
+    # unbudgeted (reported, not enforced)
+    max_programs: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # live jit-cache sizes vs budget (e.g. Scheduler.compile_counts())
+    live_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    live_budget: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class PallasTrace:
+    """One traced kernel entry point for the Pallas tiling check."""
+    label: str
+    closed_jaxpr: Any                       # jax.core.ClosedJaxpr
+    # whether this kernel's public wrapper falls back to interpreter
+    # mode on the current backend (info finding, error on TPU)
+    interpret_fallback: bool = False
+
+
+@dataclasses.dataclass
+class Built:
+    """Everything a contract hands to the checks."""
+    compiled: List[CompiledUnit] = dataclasses.field(default_factory=list)
+    hot: Optional[Callable[[], Any]] = None         # transfer-guard target
+    hot_label: str = "hot path"
+    # (label, ClosedJaxpr) traced hot programs for the jaxpr walks
+    hot_jaxprs: List[Tuple[str, Any]] = dataclasses.field(default_factory=list)
+    replay: Optional[Replay] = None
+    pallas: List[PallasTrace] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Contract:
+    name: str
+    build: Callable[[], Built]
+    checks: Tuple[str, ...]
+    description: str = ""
+
+
+CheckFn = Callable[[str, Built], List[Finding]]
+
+CHECKS: Dict[str, CheckFn] = {}
+CONTRACTS: Dict[str, Contract] = {}
+
+
+def register_check(name: str) -> Callable[[CheckFn], CheckFn]:
+    def deco(fn: CheckFn) -> CheckFn:
+        if name in CHECKS and CHECKS[name] is not fn:
+            raise ValueError(f"check {name!r} already registered")
+        CHECKS[name] = fn
+        return fn
+    return deco
+
+
+def register_contract(
+    name: str, checks: Sequence[str], description: str = ""
+) -> Callable[[Callable[[], Built]], Callable[[], Built]]:
+    """Decorator declaring a program contract at its jit site."""
+    def deco(build: Callable[[], Built]) -> Callable[[], Built]:
+        if name in CONTRACTS and CONTRACTS[name].build is not build:
+            raise ValueError(f"contract {name!r} already registered")
+        CONTRACTS[name] = Contract(
+            name=name, build=build, checks=tuple(checks),
+            description=description,
+        )
+        return build
+    return deco

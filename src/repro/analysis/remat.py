@@ -1,0 +1,79 @@
+"""Shared rematerialization / collective-pressure detectors.
+
+Two complementary detectors live here, shared by ``launch.dryrun`` and
+the lint's collectives check:
+
+* :func:`capture_fd_stderr` + :data:`REMAT_WARNING` — the OS-level
+  stderr capture around compilation.  XLA's SPMD partitioner reports
+  "Involuntary full rematerialization" through C++ logging on fd 2
+  (there is no Python-visible API for it), so the fd capture stays the
+  source of truth for dryrun's ``--fail-on-remat`` gate.
+* :func:`oversized_collectives` — HLO-text detection: trip-count-aware
+  per-site collective listing (``launch.hlo_analysis.collective_sites``)
+  filtered against per-collective byte budgets.  The remat the stderr
+  warning describes *manifests* in the compiled module as a full
+  all-gather of a partitioned operand inside the loop — this detector
+  finds that site (and any other budget-blowing collective) from the
+  artifact alone, which is what the lint gates on.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+import tempfile
+from typing import Dict, List, Optional
+
+from repro.launch.hlo_analysis import collective_sites
+
+REMAT_WARNING = "Involuntary full rematerialization"
+
+
+@contextlib.contextmanager
+def capture_fd_stderr(sink: Dict[str, str]):
+    """Capture OS-level stderr around a block (XLA's C++ logging writes
+    to fd 2 directly, bypassing ``sys.stderr``) and re-emit it
+    afterwards, so compile-time partitioner warnings — notably the
+    "Involuntary full rematerialization" copies a missing sharding
+    annotation forces — become assertable data instead of scroll-by."""
+    fd_saved = os.dup(2)
+    with tempfile.TemporaryFile(mode="w+b") as tmp:
+        sys.stderr.flush()
+        os.dup2(tmp.fileno(), 2)
+        try:
+            yield
+        finally:
+            sys.stderr.flush()
+            os.dup2(fd_saved, 2)
+            os.close(fd_saved)
+            tmp.seek(0)
+            sink["text"] = tmp.read().decode("utf-8", "replace")
+            # Re-emit INSIDE the finally so a failing compile still gets
+            # its XLA diagnostics into the real stderr — the error case
+            # is exactly when they matter.
+            if sink["text"]:
+                sys.stderr.write(sink["text"])
+                sys.stderr.flush()
+
+
+def count_remat_warnings(stderr_text: str) -> int:
+    return stderr_text.count(REMAT_WARNING)
+
+
+def oversized_collectives(
+    hlo_text: str,
+    budget: Dict[str, int],
+    default_budget: Optional[int] = None,
+) -> List[Dict]:
+    """Collective sites whose per-device output bytes exceed their
+    budget.  ``budget`` maps collective opcode -> max bytes (0 forbids
+    the collective outright); opcodes absent from ``budget`` fall back
+    to ``default_budget`` (``None`` = unbudgeted).  Each returned site
+    carries the enclosing-loop trip multiplier, so a per-step all-gather
+    inside a scanned body is attributable to its real repeat count."""
+    flagged = []
+    for site in collective_sites(hlo_text):
+        limit = budget.get(site["collective"], default_budget)
+        if limit is not None and site["bytes"] > limit:
+            flagged.append(dict(site, budget=limit))
+    return flagged

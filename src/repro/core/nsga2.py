@@ -211,6 +211,11 @@ def _extract_result(
     else:
         arch = np.unique(np.asarray(archive).reshape(-1, N_GENES), axis=0)
     arch_p, n = scen_mod.pad_to_bucket(arch, bucket)
+    # row() slices back to numpy scalars — transfer explicitly.
+    # device_put (not jnp.asarray): converting a host scalar's dtype
+    # routes through convert_element_type, an *implicit* transfer that
+    # jax.transfer_guard("disallow") rejects.
+    row = jax.tree.map(jax.device_put, row)
     aF, av, mask = jax.tree.map(
         lambda a: np.asarray(a)[:n],
         _archive_front_jit(row, jnp.asarray(arch_p)),
@@ -225,6 +230,15 @@ def _extract_result(
     )
 
 
+def _seed_key(seed: int):
+    """PRNGKey whose seed transfer is *explicit* (``device_put``).
+
+    ``jax.random.PRNGKey(int)`` moves the seed scalar host->device
+    implicitly, which trips ``jax.transfer_guard("disallow")`` — the
+    transfers lint replays :func:`run_batched` under that guard."""
+    return jax.random.PRNGKey(jax.device_put(np.int64(seed)))
+
+
 def run_batched(
     table: ScenarioTable, cfg: NSGA2Config = NSGA2Config()
 ) -> List[NSGA2Result]:
@@ -234,9 +248,18 @@ def run_batched(
     :func:`run`/:func:`run_static` call with the same config, so the
     batched fronts match the sequential per-scenario path exactly."""
     S = len(table)
-    key = jax.random.PRNGKey(cfg.seed)
+    key = _seed_key(cfg.seed)
     keys = jnp.broadcast_to(key, (S,) + key.shape)
-    pops, F, v, archives = _run_batched_jit(table, cfg, keys)
+    # Tables are built with numpy leaves; transfer them explicitly so
+    # the jit call itself stays clean under jax.transfer_guard (the
+    # transfers lint replays this path under "disallow").
+    table = jax.tree.map(jax.device_put, table)
+    out = _run_batched_jit(table, cfg, keys)
+    # Extraction below is host-side (np.unique, per-scenario slicing):
+    # pull the batch to host ONCE.  Indexing the device arrays per
+    # scenario instead would implicitly transfer each index scalar —
+    # the transfers lint runs this path under a disallow guard.
+    pops, F, v, archives = (np.asarray(x) for x in out)
     # Dedup every scenario's archive first, then extract all fronts
     # through ONE padded shape: S scenarios share a single
     # ``_archive_front_jit`` compile instead of one per distinct size.
@@ -303,3 +326,48 @@ def run_unjitted(space, cfg: NSGA2Config = NSGA2Config()) -> NSGA2Result:
     ranks, _ = _rank_and_crowd(F, v, cfg.use_pallas)
     archive = np.concatenate(visited + [np.asarray(pop)])
     return _extract_result(row, pop, F, v, ranks, archive)
+
+
+# ------------------------------ lint contract --------------------------------
+from repro.analysis.registry import Built, Replay, register_contract  # noqa: E402
+
+
+@register_contract(
+    "nsga2.run_batched",
+    checks=("recompile", "transfers"),
+    description="batched DSE at a tiny budget: two scenario tables with "
+                "equal shapes but different contents must share ONE "
+                "compiled program (scenario params are traced data), and "
+                "the host pipeline must transfer only explicitly",
+)
+def _build_nsga2_contract() -> Built:
+    from repro.analysis.jaxpr_tools import canonical_signature
+
+    cfg = NSGA2Config(pop_size=16, generations=4)
+    t1 = ScenarioTable.from_specs([("int8", 16384), ("int4", 16384)])
+    # Same static metadata as t1 (all-INT => any_fp/all_fp agree), so a
+    # single compiled program must serve both tables.
+    t2 = ScenarioTable.from_specs([("int16", 32768), ("int2", 16384)])
+
+    base = int(_run_batched_jit._cache_size())
+    signatures = []
+    key = jax.random.PRNGKey(cfg.seed)
+    for t in (t1, t2):
+        keys = jnp.broadcast_to(key, (len(t),) + key.shape)
+        signatures.append((
+            "run_batched",
+            canonical_signature((jax.tree.map(jnp.asarray, t), keys)),
+        ))
+        run_batched(t, cfg)
+    grown = int(_run_batched_jit._cache_size()) - base
+    replay = Replay(
+        signatures=signatures,
+        max_programs={"run_batched": 1},
+        live_counts={"run_batched": grown},
+        live_budget={"run_batched": 1},
+    )
+
+    def hot():
+        return run_batched(t1, cfg)
+
+    return Built(hot=hot, hot_label="run_batched pipeline", replay=replay)

@@ -176,3 +176,72 @@ def dcim_fp_matmul(
     )                                                              # (M,G,N)
     out = jnp.sum(partials.transpose(1, 0, 2) * scale, axis=1)
     return out.astype(jnp.float32)
+
+
+# ------------------------------ lint contract --------------------------------
+from repro.analysis.registry import Built, PallasTrace, register_contract
+
+
+@register_contract(
+    "kernels.pallas",
+    checks=("pallas",),
+    description="every Pallas kernel traced at representative shapes: "
+                "BlockSpec lane/sublane tiling, grid coverage of the "
+                "padded arrays, interpreter-fallback accounting",
+)
+def _build_kernels_contract() -> Built:
+    from repro.kernels.pareto_rank import dominance_matrix_pallas
+    from repro.kernels.selective_scan import selective_scan_pallas
+
+    fallback = _interpret_default()
+    traces = []
+
+    F = jnp.zeros((130, 4), jnp.float32)
+    traces.append(PallasTrace(
+        "pareto_rank.dominance_matrix_pallas",
+        jax.make_jaxpr(
+            lambda f: dominance_matrix_pallas(f, interpret=True)
+        )(F),
+        interpret_fallback=fallback,
+    ))
+
+    x8 = jnp.zeros((32, 64), jnp.int32)
+    w8 = jnp.zeros((64, 16), jnp.int32)
+    traces.append(PallasTrace(
+        "dcim_mvm.dcim_mvm_pallas",
+        jax.make_jaxpr(
+            lambda a, b: _mvm.dcim_mvm_pallas(
+                a, b, B_x=8, B_w=8, k=4, interpret=True
+            )
+        )(x8, w8),
+        interpret_fallback=fallback,
+    ))
+
+    xg = jnp.zeros((10, 3, 64), jnp.float32)
+    traces.append(PallasTrace(
+        "fp_prealign.fp_prealign_pallas",
+        jax.make_jaxpr(
+            lambda a: _pre.fp_prealign_pallas(a, B_M=8, interpret=True)
+        )(xg),
+        interpret_fallback=fallback,
+    ))
+
+    B, S, D, N = 2, 64, 128, 16
+    traces.append(PallasTrace(
+        "selective_scan.selective_scan_pallas",
+        jax.make_jaxpr(
+            lambda u, dt, b, c, a, d: selective_scan_pallas(
+                u, dt, b, c, a, d, interpret=True
+            )
+        )(
+            jnp.zeros((B, S, D), jnp.float32),
+            jnp.zeros((B, S, D), jnp.float32),
+            jnp.zeros((B, S, N), jnp.float32),
+            jnp.zeros((B, S, N), jnp.float32),
+            -jnp.ones((D, N), jnp.float32),
+            jnp.zeros((D,), jnp.float32),
+        ),
+        interpret_fallback=fallback,
+    ))
+
+    return Built(pallas=traces)

@@ -17,11 +17,8 @@ Usage:
 """
 # (no __future__ import: the XLA_FLAGS lines must be the first statements)
 import argparse
-import contextlib
 import pathlib
 import re
-import sys
-import tempfile
 import time
 import traceback
 from functools import partial
@@ -29,7 +26,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -191,35 +187,18 @@ def build_decode_cell(cfg: LMConfig, shape, mesh):
 
 
 # ----------------------------- analysis ----------------------------------------
-_COLLECTIVES = (
-    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-    "collective-permute",
-)
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-}
-_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
-
-
-def _op_output_bytes(line: str) -> int:
-    """Sum byte sizes of the result shapes on an HLO op line (the segment
-    before '= <opcode>')."""
-    lhs = line.split("=")[0]
-    total = 0
-    for m in _SHAPE_RE.finditer(lhs):
-        dt, dims = m.groups()
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                if d:
-                    n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+# Shape/dtype parsing and the collective taxonomy live in
+# repro.launch.hlo_analysis (shared with repro.analysis); this module
+# keeps only the naive whole-text scan for the "collectives_naive"
+# record field.
+from repro.launch.hlo_analysis import _COLLECTIVES, op_output_bytes
 
 
 def collective_stats(hlo_text: str) -> Dict[str, Any]:
-    """Per-collective-type op counts + output bytes (per-device, post-SPMD)."""
+    """Per-collective-type op counts + output bytes (per-device, post-SPMD).
+
+    Naive: every op line counts once, regardless of loop trip counts —
+    ``rec["analysis"]`` (``analyze_hlo``) holds the trip-aware totals."""
     stats = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
         ls = line.strip()
@@ -233,7 +212,7 @@ def collective_stats(hlo_text: str) -> Dict[str, Any]:
                 if op.endswith("-done"):
                     break  # counted at -start
                 stats[coll]["count"] += 1
-                stats[coll]["bytes"] += _op_output_bytes(ls)
+                stats[coll]["bytes"] += op_output_bytes(ls)
                 break
     return stats
 
@@ -289,34 +268,11 @@ def analyze_compiled(lowered, compiled, hlo_path: Optional[pathlib.Path] = None)
 
 
 # ----------------------------- runner -------------------------------------------
-REMAT_WARNING = "Involuntary full rematerialization"
-
-
-@contextlib.contextmanager
-def _capture_fd_stderr(sink: Dict[str, str]):
-    """Capture OS-level stderr around a block (XLA's C++ logging writes
-    to fd 2 directly, bypassing ``sys.stderr``) and re-emit it
-    afterwards, so compile-time partitioner warnings — notably the
-    "Involuntary full rematerialization" copies a missing sharding
-    annotation forces — become assertable data instead of scroll-by."""
-    fd_saved = os.dup(2)
-    with tempfile.TemporaryFile(mode="w+b") as tmp:
-        sys.stderr.flush()
-        os.dup2(tmp.fileno(), 2)
-        try:
-            yield
-        finally:
-            sys.stderr.flush()
-            os.dup2(fd_saved, 2)
-            os.close(fd_saved)
-            tmp.seek(0)
-            sink["text"] = tmp.read().decode("utf-8", "replace")
-            # Re-emit INSIDE the finally so a failing compile still gets
-            # its XLA diagnostics into the real stderr — the error case
-            # is exactly when they matter.
-            if sink["text"]:
-                sys.stderr.write(sink["text"])
-                sys.stderr.flush()
+# Stderr capture moved to repro.analysis.remat (shared with the lint's
+# collectives/remat check); dryrun keeps the per-cell remat_warnings
+# count and the stderr tail on FAILED cells.
+from repro.analysis.remat import REMAT_WARNING
+from repro.analysis.remat import capture_fd_stderr as _capture_fd_stderr
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,

@@ -17,17 +17,23 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 _DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s2": 1, "u2": 1,
     "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4,
     "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    # fp8 families (1 byte each): XLA prints the full IEEE-style name.
+    # Missing entries silently undercounted fp8 collective/dot bytes.
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
     "token": 0, "opaque": 0,
 }
 
-_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([0-9,]*)\]")
+# Dtype tokens mix letters and digits (f8e4m3fn, bf16): match the full
+# alphanumeric run, then filter through _DTYPE_BYTES.
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
 _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([a-z][\w\-]*)\((.*)$"
@@ -299,6 +305,76 @@ class HloAnalyzer:
         # memo must be recomputed cleanly (cycle-breaking writes zeros first)
         self._memo.clear()
         return self._analyze_comp(self.entry)
+
+    # --- per-site collective walk ---------------------------------------------
+    def collective_sites(self) -> List[Dict]:
+        """Every collective op site reachable from the entry computation,
+        with the product of enclosing while trip counts attached.
+
+        Unlike :meth:`totals` (which aggregates), this keeps one record
+        per HLO op so a lint can point at the exact all-gather that blew
+        a byte budget — and weight it by how many times the loop runs."""
+        sites: List[Dict] = []
+        if self.entry is None:
+            return sites
+        seen = set()
+
+        def visit(name: str, mult: float) -> None:
+            comp = self.comps.get(name)
+            if comp is None or (name, mult) in seen:
+                return
+            seen.add((name, mult))
+            for op in comp.ops:
+                oc = op.opcode
+                for coll in _COLLECTIVES:
+                    if oc == coll or oc == coll + "-start":
+                        sites.append({
+                            "collective": coll,
+                            "op": op.name,
+                            "computation": name,
+                            "shape": op.shape,
+                            "bytes": _shape_bytes(op.shape),
+                            "trip_mult": mult,
+                        })
+                        break
+                if oc == "while":
+                    body = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                    cond = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                    trips = 1
+                    if cond and cond.group(1) in self.comps:
+                        trips = _trip_count(
+                            self.comps[cond.group(1)], comp.symtab, op.rest
+                        )
+                    if body:
+                        visit(body.group(1), mult * trips)
+                elif oc in ("fusion", "call", "custom-call", "conditional",
+                            "reduce", "map", "reduce-window", "scatter",
+                            "sort", "select-and-scatter"):
+                    for m in re.finditer(r"%([\w\.\-]+)", op.rest):
+                        if m.group(1) in self.comps:
+                            visit(m.group(1), mult)
+
+        visit(self.entry, 1.0)
+        return sites
+
+
+def collective_sites(text: str) -> List[Dict]:
+    """Per-site collective listing of an HLO module (see
+    :meth:`HloAnalyzer.collective_sites`)."""
+    return HloAnalyzer(text).collective_sites()
+
+
+def op_output_bytes(line: str) -> int:
+    """Sum byte sizes of the RESULT shape(s) on one HLO op line — the
+    segment between ``=`` and the opcode (tuple shapes included).
+    Shared with ``launch.dryrun``'s naive per-line collective counter.
+
+    (The previous version scanned the text *before* ``=``, i.e. the op
+    name, and silently returned 0 for every real HLO line.)"""
+    m = _OP_RE.match(line)
+    if not m:
+        return 0
+    return _shape_bytes(m.group(2))
 
 
 def analyze_hlo(text: str) -> dict:

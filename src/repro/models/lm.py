@@ -18,8 +18,7 @@ parallelism is annotated on the residual stream between blocks
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -549,3 +548,57 @@ def insert_cache_slot(pool, row_caches, slot):
         ),
         pool, row_caches,
     )
+
+
+# ------------------------------ lint contract --------------------------------
+from repro.analysis.registry import Built, register_contract  # noqa: E402
+
+
+@register_contract(
+    "lm.prefill_paged",
+    checks=("donation", "transfers"),
+    description="batched paged prefill at a smoke config: the donated "
+                "pool must alias in the compiled module, and a pool-"
+                "rebinding call must run clean under a transfer guard",
+)
+def _build_prefill_paged_contract() -> Built:
+    from repro import configs
+    from repro.analysis.jaxpr_tools import compile_unit
+
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    params = init(jax.random.PRNGKey(0), cfg)
+    n_slots, page_size, pages_per_slot = 2, 8, 4
+    pool = init_paged_pool(
+        cfg, n_slots, n_slots * pages_per_slot + 1, page_size
+    )
+    B, T = 2, 8
+
+    def entry(params, pool, tokens, block_tables, slots, ctx_len, tail_valid):
+        return prefill_paged(
+            params, {"tokens": tokens}, cfg, pool, block_tables, slots,
+            ctx_len, tail_valid, page_size, False,
+        )
+
+    jitted = jax.jit(entry, donate_argnums=(1,))
+    call_args = (
+        jnp.zeros((B, T), jnp.int32),
+        jnp.zeros((B, pages_per_slot), jnp.int32),
+        jnp.asarray([0, 1], jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), T, jnp.int32),
+    )
+    unit = compile_unit(
+        "prefill_paged", jitted, (params, pool) + call_args,
+        donate_argnums=(1,),
+    )
+
+    # Rebinding call loop, exactly like the serve session drives it: the
+    # donated pool is consumed and replaced by the returned one.
+    state = {"pool": pool}
+
+    def hot():
+        new_pool, logits = jitted(params, state["pool"], *call_args)
+        state["pool"] = new_pool
+        return jax.block_until_ready(logits)
+
+    return Built(compiled=[unit], hot=hot, hot_label="prefill_paged call")

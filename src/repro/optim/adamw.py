@@ -8,7 +8,6 @@ state, params) -> (updates, state)``.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -55,7 +54,9 @@ def adamw(
                 qm, sm = _q8(z)
                 qv, sv = _q8(z)
                 return {"m_q": qm, "m_s": sm, "v_q": qv, "v_s": sv}
-            return {"m": z, "v": z}
+            # Distinct buffers: aliasing m and v to one zeros array makes
+            # any donate_argnums train step donate the same buffer twice.
+            return {"m": z, "v": jnp.zeros_like(p, jnp.float32)}
 
         return {"mu": jax.tree.map(one, params), "step": jnp.zeros((), jnp.int32)}
 

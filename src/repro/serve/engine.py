@@ -19,7 +19,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 from functools import partial
-from typing import List, Optional
+from typing import List
 
 import jax
 import jax.numpy as jnp
@@ -67,16 +67,24 @@ def check_unique_rids(request_ids) -> None:
         raise ValueError(f"duplicate request ids {dup}")
 
 
+@partial(jax.jit, static_argnums=(0,))
+def _base_key(seed: int):
+    # seed is a *static* arg: the key is baked into the compiled constant,
+    # so deriving it involves no host->device transfer at call time — the
+    # transfers lint runs the scheduler submit path under
+    # jax.transfer_guard("disallow").  One compile per distinct seed.
+    return jax.random.PRNGKey(seed)
+
+
 def derive_request_keys(seed: int, request_ids) -> jnp.ndarray:
     """Per-request PRNG base keys: ``fold_in(PRNGKey(seed), rid)``.
 
     Keys depend only on (seed, request id) — never on batch composition,
     slot assignment or arrival order — so sampled generations reproduce
     across serving paths.  Returns a (B, 2) uint32 key batch."""
-    base = jax.random.PRNGKey(seed)
-    return jax.vmap(lambda r: jax.random.fold_in(base, r))(
-        jnp.asarray(request_ids, jnp.int32)
-    )
+    base = _base_key(int(seed))
+    rids = jax.device_put(np.asarray(request_ids, np.int32))
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(rids)
 
 
 def sample_tokens(logits, keys, steps, temperature):

@@ -70,6 +70,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.registry import Built, Replay, register_contract
 from repro.models import lm
 from repro.models.config import LMConfig
 
@@ -466,7 +467,10 @@ class ServeSession:
                  on_token=None, sorted_insert: bool = True) -> StreamHandle:
         """Post-validation enqueue shared by ``submit`` and ``serve``."""
         seed = self.s.seed if seed is None else seed
-        key = np.asarray(derive_request_keys(seed, [req.rid])[0])
+        # np.asarray BEFORE the [0]: indexing the device array with a
+        # Python int would transfer the index constant implicitly (the
+        # transfers lint runs submit/step under a disallow guard).
+        key = np.asarray(derive_request_keys(seed, [req.rid]))[0]
         self._ensure_trace()
         handle = StreamHandle(self, req, key, on_token=on_token)
         self._live_rids.add(req.rid)
@@ -684,10 +688,14 @@ class ServeSession:
             bucket = self.s._bucket_for(P)
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :P] = req.prompt
+            # Explicit conversions only: a raw np scalar as a jit arg is
+            # an implicit host->device transfer (the transfers lint runs
+            # this path under jax.transfer_guard("disallow")).
             self.pool, tok0 = self.s._prefill_jit(bucket)(
                 self.s.params, self.pool, jnp.asarray(padded),
-                np.int32(P), np.int32(slot), jnp.asarray(handle.key),
-                np.float32(req.temperature),
+                jnp.asarray(np.int32(P)), jnp.asarray(np.int32(slot)),
+                jnp.asarray(handle.key),
+                jnp.asarray(np.float32(req.temperature)),
             )
             self.prefills += 1
             self.prefill_batches += 1
@@ -968,3 +976,123 @@ class Scheduler:
         pre-session scheduler this does NOT rebuild the device pool:
         prefix pages cached by an earlier ``serve()`` call are warm."""
         return self.session().serve(requests, seed=seed)
+
+
+# ------------------------------ lint contract --------------------------------
+@register_contract(
+    "serve.scheduler",
+    checks=("donation", "transfers", "recompile"),
+    description="paged continuous-batching serve loop at a smoke config: "
+                "the pool donation must alias, the ServeSession.step() hot "
+                "path must not transfer implicitly, and a replayed mixed "
+                "trace must stay within the one-decode + "
+                "one-prefill-per-(bucket,width) compile budget",
+)
+def _build_serve_contract() -> Built:
+    from repro import configs
+    from repro.analysis.jaxpr_tools import (
+        canonical_signature,
+        compile_unit,
+    )
+
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    sched = Scheduler(cfg, params, max_slots=3, max_len=32, page_size=8)
+    session = sched.session()
+
+    # --- replay a mixed-length trace, recording abstract signatures ---
+    signatures: List[Tuple[str, str]] = []
+    orig_decode, orig_prefill_jit = sched._decode, sched._prefill_jit
+
+    def spy_decode(*args):
+        signatures.append(("decode", canonical_signature(args)))
+        return orig_decode(*args)
+
+    def spy_prefill_jit(key):
+        fn = orig_prefill_jit(key)
+
+        def wrapped(*args):
+            signatures.append(("prefill", canonical_signature(args)))
+            return fn(*args)
+
+        return wrapped
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(1, 64, p).astype(np.int32),
+                n_tokens=t, rid=i, arrival=a)
+        for i, (p, t, a) in enumerate(
+            [(3, 2, 0), (5, 3, 0), (9, 2, 0), (3, 4, 1), (17, 2, 2),
+             (6, 3, 2)]
+        )
+    ]
+    sched._decode, sched._prefill_jit = spy_decode, spy_prefill_jit
+    try:
+        session.serve(reqs)
+    finally:
+        sched._decode, sched._prefill_jit = orig_decode, orig_prefill_jit
+
+    counts = sched.compile_counts()
+    replay = Replay(
+        signatures=signatures,
+        # one decode signature ever; prefill signatures may differ only
+        # as much as the (bucket, width) program keys actually used
+        max_programs={"decode": 1, "prefill": len(sched._prefills)},
+        live_counts={
+            "decode": counts["decode"],
+            "prefill": sum(counts["prefill"].values()),
+        },
+        live_budget={"decode": 1, "prefill": len(sched._prefills)},
+    )
+
+    # --- compiled units for the donation check ---
+    S = sched.max_slots
+    decode_args = (
+        params, session.pool, jnp.asarray(session.cur),
+        jnp.asarray(session.pos), jnp.asarray(session.active),
+        jnp.asarray(session.btables), jnp.asarray(session.keys),
+        jnp.asarray(session.steps), jnp.asarray(session.temps),
+    )
+    units = [compile_unit(
+        "decode", sched._decode, decode_args, donate_argnums=(1,)
+    )]
+    if sched._prefills:
+        bucket, width = sorted(
+            k for k in sched._prefills if isinstance(k, tuple)
+        )[0]
+        prefill_args = (
+            params, session.pool,
+            jnp.zeros((width, bucket), jnp.int32),
+            jnp.zeros((width, sched.pages_per_slot), jnp.int32),
+            jnp.full((width,), S, jnp.int32),
+            jnp.zeros((width,), jnp.int32),
+            jnp.zeros((width,), jnp.int32),
+            jnp.zeros((width, 2), jnp.uint32),
+            jnp.zeros((width,), jnp.float32),
+        )
+        units.append(compile_unit(
+            f"prefill[{bucket},{width}]", sched._prefill_jit((bucket, width)),
+            prefill_args, donate_argnums=(1,),
+        ))
+
+    # --- hot path for the transfers check ---
+    def hot():
+        handle = session.submit(
+            Request(prompt=rng.integers(1, 64, 7).astype(np.int32),
+                    n_tokens=3, rid=9001)
+        )
+        while not session.idle:
+            session.step()
+        return handle.result
+
+    decode_jaxpr = jax.make_jaxpr(
+        partial(_decode_paged_fn, cfg=cfg)
+    )(*decode_args)
+
+    return Built(
+        compiled=units,
+        hot=hot,
+        hot_label="ServeSession.step()",
+        hot_jaxprs=[("decode", decode_jaxpr)],
+        replay=replay,
+    )

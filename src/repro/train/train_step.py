@@ -86,3 +86,69 @@ def build(cfg: LMConfig, optimizer: str = "adamw", lr=3e-4,
     opt = get_optimizer(optimizer, lr, **opt_kw)
     state = init_state(jax.random.PRNGKey(seed), cfg, opt, grad_compression)
     return state, make_train_step(cfg, opt, grad_compression)
+
+
+# ------------------------------ lint contract --------------------------------
+from repro.analysis.registry import Built, Replay, register_contract
+
+
+@register_contract(
+    "train.train_step",
+    checks=("donation", "transfers", "recompile"),
+    description="jitted train step at a smoke config: the donated "
+                "TrainState must alias output state leaf-for-leaf, "
+                "repeated same-shape steps must not retrace, and the "
+                "state-rebinding loop must run clean under a transfer "
+                "guard",
+)
+def _build_train_step_contract() -> Built:
+    from repro import configs
+    from repro.analysis.jaxpr_tools import canonical_signature, compile_unit
+
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    opt = get_optimizer("adamw", 1e-3)
+    state = init_state(jax.random.PRNGKey(0), cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+
+    B, S = 2, 16
+    def batch_of(seed: int):
+        key = jax.random.PRNGKey(seed)
+        toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size, jnp.int32)
+        return {
+            "tokens": toks,
+            "targets": jnp.roll(toks, -1, axis=1),
+            "loss_mask": jnp.ones((B, S), jnp.float32),
+        }
+
+    unit = compile_unit(
+        "train_step", step, (state, batch_of(0)), donate_argnums=(0,)
+    )
+
+    # Replay: two same-shape steps through the REAL jit, rebinding the
+    # donated state, then compare the live cache size to the budget.
+    signatures = []
+    holder = {"state": state}
+    for i in range(2):
+        batch = batch_of(i)
+        signatures.append(
+            ("train_step", canonical_signature((holder["state"], batch)))
+        )
+        holder["state"], _ = step(holder["state"], batch)
+    replay = Replay(
+        signatures=signatures,
+        max_programs={"train_step": 1},
+        live_counts={"train_step": int(step._cache_size())},
+        live_budget={"train_step": 1},
+    )
+
+    hot_batch = batch_of(2)  # PRNGKey(int) transfers its seed: keep it
+    # outside the guarded hot path — only the step call is under test.
+
+    def hot():
+        new_state, metrics = step(holder["state"], hot_batch)
+        holder["state"] = new_state
+        return jax.block_until_ready(metrics["loss"])
+
+    return Built(
+        compiled=[unit], hot=hot, hot_label="train_step call", replay=replay
+    )

@@ -1,0 +1,260 @@
+"""Seeded-bad fixtures for the program-contract lint: every check must
+FAIL on a program constructed to violate exactly its contract, and stay
+quiet on the matching clean fixture.  The clean-repo pass itself is the
+``python -m repro.analysis.lint --all`` gate in scripts/check.sh / CI;
+here we pin down what each check detects."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import load_builtin_checks
+from repro.analysis.registry import (
+    CHECKS,
+    Built,
+    CompiledUnit,
+    PallasTrace,
+    Replay,
+)
+from repro.analysis.jaxpr_tools import (
+    canonical_signature,
+    compile_unit,
+    strip_weak,
+)
+from repro.launch.hlo_analysis import collective_sites, op_output_bytes
+
+load_builtin_checks()
+
+
+def _errors(findings):
+    return [f for f in findings if f.severity == "error"]
+
+
+# --------------------------- donation ----------------------------------------
+def test_donation_dropped_fixture():
+    # Output is a scalar: XLA cannot alias the donated (256,256) input,
+    # drops the donation silently (warning only) — the check must error.
+    f = jax.jit(lambda x: x.sum(), donate_argnums=(0,))
+    x = jnp.ones((256, 256), jnp.float32)
+    unit = compile_unit("bad_donate", f, (x,), donate_argnums=(0,))
+    findings = CHECKS["donation"]("fixture", Built(compiled=[unit]))
+    errs = _errors(findings)
+    assert len(errs) == 1
+    assert "dropped" in errs[0].message
+    assert errs[0].data["dropped"][0]["nbytes"] == 256 * 256 * 4
+
+
+def test_donation_clean_fixture():
+    # Same-shape output: the donation aliases, no findings at all.
+    f = jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+    x = jnp.ones((256, 256), jnp.float32)
+    unit = compile_unit("good_donate", f, (x,), donate_argnums=(0,))
+    findings = CHECKS["donation"]("fixture", Built(compiled=[unit]))
+    assert not _errors(findings)
+
+
+# --------------------------- transfers ---------------------------------------
+def test_transfers_implicit_fixture():
+    # A raw numpy array handed straight to a jitted program is an
+    # implicit host-to-device transfer: the guard raises, the check errors.
+    f = jax.jit(lambda x: x + 1.0)
+    f(jnp.zeros(8, jnp.float32))  # warm: only the replay runs guarded
+    built = Built(hot=lambda: f(np.zeros(8, np.float32)),
+                  hot_label="raw-numpy call")
+    errs = _errors(CHECKS["transfers"]("fixture", built))
+    assert len(errs) == 1
+    assert "implicit transfer" in errs[0].message
+
+
+def test_transfers_clean_fixture():
+    f = jax.jit(lambda x: x + 1.0)
+    x = jnp.zeros(8, jnp.float32)
+    f(x)
+    built = Built(hot=lambda: jax.block_until_ready(f(x)))
+    assert not CHECKS["transfers"]("fixture", built)
+
+
+def test_transfers_host_callback_fixture():
+    # A pure_callback inside the traced hot program is a per-step host
+    # sync — flagged from the jaxpr walk alone, nothing is executed.
+    def g(x):
+        y = jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct((4,), jnp.float32), x)
+        return y + 1.0
+
+    jaxpr = jax.make_jaxpr(g)(jnp.zeros(4, jnp.float32))
+    built = Built(hot_jaxprs=[("g", jaxpr)])
+    errs = _errors(CHECKS["transfers"]("fixture", built))
+    assert len(errs) == 1
+    assert "pure_callback" in errs[0].message
+
+
+# --------------------------- recompile ---------------------------------------
+def test_recompile_weak_type_drift_fixture():
+    # Same program called with a committed array and a Python-scalar-weak
+    # aval: signatures differ only in the weak bit.
+    committed = canonical_signature((jnp.float32(1.0) * jnp.ones(()),))
+    weak = canonical_signature((jnp.asarray(1.0),))
+    if strip_weak(committed) == strip_weak(weak) and committed != weak:
+        sigs = [("step", committed), ("step", weak)]
+    else:  # fallback: handcrafted signatures with the same invariant
+        sigs = [("step", "T::float32[]|w0"), ("step", "T::float32[]|w1")]
+    replay = Replay(signatures=sigs, max_programs={"step": 1})
+    errs = _errors(CHECKS["recompile"]("fixture", Built(replay=replay)))
+    assert any("weak-type drift" in e.message for e in errs)
+    assert any("retraces" in e.message for e in errs)
+
+
+def test_recompile_budget_and_live_cache_fixture():
+    replay = Replay(
+        signatures=[("step", "T::float32[2]|w0"),
+                    ("step", "T::float32[4]|w0")],
+        max_programs={"step": 1},
+        live_counts={"step": 3},
+        live_budget={"step": 1},
+    )
+    errs = _errors(CHECKS["recompile"]("fixture", Built(replay=replay)))
+    assert any("2 distinct abstract signatures" in e.message for e in errs)
+    assert any("holds 3 compiled programs" in e.message for e in errs)
+    assert not any("weak-type" in e.message for e in errs)
+
+
+def test_recompile_clean_fixture():
+    replay = Replay(
+        signatures=[("step", "T::float32[2]|w0")] * 3,
+        max_programs={"step": 1},
+        live_counts={"step": 1}, live_budget={"step": 1},
+    )
+    assert not CHECKS["recompile"]("fixture", Built(replay=replay))
+
+
+# --------------------------- collectives -------------------------------------
+# Hand-written post-SPMD module: an all-gather inside a while loop whose
+# condition bounds the counter at 8 — the site must be reported with its
+# byte size AND the x8 trip multiplier.
+_BAD_HLO = """\
+HloModule fixture
+
+%body (param.1: (s32[], f32[16,16])) -> (s32[], f32[16,16]) {
+  %param.1 = (s32[], f32[16,16]) parameter(0)
+  %gte.0 = s32[] get-tuple-element((s32[], f32[16,16]) %param.1), index=0
+  %one = s32[] constant(1)
+  %next = s32[] add(s32[] %gte.0, s32[] %one)
+  %gte.1 = f32[16,16] get-tuple-element((s32[], f32[16,16]) %param.1), index=1
+  %ag = f32[16,16] all-gather(f32[2,16] %gte.1), replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}
+  ROOT %tup = (s32[], f32[16,16]) tuple(s32[] %next, f32[16,16] %ag)
+}
+
+%cond (param.2: (s32[], f32[16,16])) -> pred[] {
+  %param.2 = (s32[], f32[16,16]) parameter(0)
+  %gte.2 = s32[] get-tuple-element((s32[], f32[16,16]) %param.2), index=0
+  %trips = s32[] constant(8)
+  ROOT %lt = pred[] compare(s32[] %gte.2, s32[] %trips), direction=LT
+}
+
+ENTRY %main (arg: f32[16,16]) -> f32[16,16] {
+  %arg = f32[16,16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[16,16]) tuple(s32[] %zero, f32[16,16] %arg)
+  %loop = (s32[], f32[16,16]) while((s32[], f32[16,16]) %init), condition=%cond, body=%body
+  ROOT %res = f32[16,16] get-tuple-element((s32[], f32[16,16]) %loop), index=1
+}
+"""
+
+
+def test_collectives_oversized_fixture():
+    unit = CompiledUnit(label="bad_spmd", hlo=_BAD_HLO,
+                        collective_budget={"all-gather": 512})
+    errs = _errors(CHECKS["collectives"]("fixture", Built(compiled=[unit])))
+    assert len(errs) == 1
+    site = errs[0].data["site"]
+    assert site["collective"] == "all-gather"
+    assert site["bytes"] == 16 * 16 * 4          # 1024 > 512 budget
+    assert site["trip_mult"] == 8                # while trips attached
+
+
+def test_collectives_forbidden_and_clean_fixture():
+    unit0 = CompiledUnit(label="forbid", hlo=_BAD_HLO,
+                         collective_budget={"all-gather": 0})
+    errs = _errors(CHECKS["collectives"]("fixture", Built(compiled=[unit0])))
+    assert len(errs) == 1 and "forbidden" in errs[0].message
+
+    unit1 = CompiledUnit(label="roomy", hlo=_BAD_HLO,
+                         collective_budget={"all-gather": 1 << 20})
+    findings = CHECKS["collectives"]("fixture", Built(compiled=[unit1]))
+    assert not _errors(findings)
+    assert any("within budget" in f.message for f in findings)
+
+
+# --------------------------- pallas ------------------------------------------
+def _bad_pallas_trace():
+    import jax.experimental.pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def bad(x):
+        return pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((64, 700), x.dtype),
+            grid=(4,),
+            in_specs=[pl.BlockSpec((16, 100), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((16, 100), lambda i: (i, 0)),
+            interpret=True,
+        )(x)
+
+    return jax.make_jaxpr(bad)(jnp.zeros((64, 700), jnp.float32))
+
+
+def test_pallas_misaligned_and_short_grid_fixture():
+    trace = PallasTrace(label="bad_kernel",
+                        closed_jaxpr=_bad_pallas_trace())
+    findings = CHECKS["pallas"]("fixture", Built(pallas=[trace]))
+    errs = _errors(findings)
+    # Last block dim 100: neither the full 700 nor a multiple of 128.
+    assert any("lane tile" in e.message for e in errs)
+    # Grid (4,) x block (16,100) via (i, 0) covers 100 of 700 in dim 1.
+    assert any("never visited" in e.message for e in errs)
+
+
+def test_pallas_clean_repo_kernels():
+    # The real kernels' contract must lint clean: errors here mean either
+    # a kernel regressed or the tiling rules drifted from reality.
+    from repro.analysis.lint import run_lint
+
+    report = run_lint(checks=["pallas"], contracts=["kernels.pallas"])
+    assert report.ok, [f.message for f in report.findings]
+    assert "kernels.pallas" in report.contracts_executed
+
+
+# --------------------------- fp8 byte accounting (satellite) ------------------
+def test_fp8_hlo_byte_accounting():
+    line = ("  %ag = f8e4m3fn[2048]{0} all-gather(f8e4m3fn[256]{0} %x), "
+            "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}")
+    assert op_output_bytes(line) == 2048          # 1 byte/element
+
+    hlo = _BAD_HLO.replace("f32[16,16]", "f8e5m2[16,16]").replace(
+        "f32[2,16]", "f8e5m2[2,16]")
+    (site,) = collective_sites(hlo)
+    assert site["bytes"] == 16 * 16               # fp8: 1 byte, not 4
+    assert site["trip_mult"] == 8
+
+
+def test_op_output_bytes_parses_result_not_name():
+    # Regression: the byte counter must read the RESULT shape (after
+    # '='), including tuple results — not the op name.
+    dot = ("  ROOT %dot.2 = f32[8,8]{1,0} dot(f32[8,8]{1,0} %a, "
+           "f32[8,8]{1,0} %b), lhs_contracting_dims={1}")
+    assert op_output_bytes(dot) == 8 * 8 * 4
+    tup = "  %t = (f32[64]{0}, s32[]) tuple(%a, %b)"
+    assert op_output_bytes(tup) == 64 * 4 + 4
+
+
+# --------------------------- runner ------------------------------------------
+def test_lint_cli_list_and_unknown():
+    from repro.analysis.lint import main, run_lint
+
+    assert main(["--list"]) == 0
+    with pytest.raises(ValueError, match="unknown"):
+        run_lint(checks=["nope"])
