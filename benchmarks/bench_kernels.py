@@ -28,6 +28,11 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 _PARETO_P = ((128, 512, 1024), (128, 256))
 _MVM_MKN = (((128, 512, 128), (256, 2048, 256)), ((64, 256, 64),))
 _PREALIGN = (((64, 16, 64), (256, 32, 128)), ((64, 16, 64),))
+# (B, Hk, G, hd, page, nb): slots x kv-heads x group x head-dim, paged KV
+_PAGED_DECODE = (((8, 8, 4, 128, 16, 32), (16, 8, 8, 128, 16, 64)),
+                 ((4, 2, 4, 64, 16, 8),))
+# (B, T, Hk, G, hd, L): burst width x tail x heads x context capacity
+_PREFIX = (((8, 64, 8, 4, 128, 512),), ((4, 16, 2, 4, 64, 128),))
 
 
 def run(smoke: bool) -> dict:
@@ -62,15 +67,75 @@ def run(smoke: bool) -> dict:
             "gmacs_per_s": gmacs,
         }
 
-    # fp_prealign
+    # fp_prealign — through the public dispatcher (XLA ref on CPU, the
+    # compiled kernel on TPU), vs the ref timed directly.
     for shape in _PREALIGN[smoke]:
-        x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
-        us_k = time_fn(
-            lambda a: ops._pre.fp_prealign_pallas(a, B_M=8), x)
-        us_r = time_fn(lambda a: ref.fp_prealign_ref(a, B_M=8), x)
+        M, G, H = shape
+        x = jnp.asarray(rng.normal(size=(M, G * H)).astype(np.float32))
+        xg = x.reshape(shape)
+        us_k = time_fn(lambda a: ops.fp_prealign(a, H=H, B_M=8), x)
+        us_r = time_fn(lambda a: ref.fp_prealign_ref(a, B_M=8), xg)
         name = f"fp_prealign.{'x'.join(map(str, shape))}"
         emit(name, us_k, f"ref_us={us_r:.1f}")
         kernels[name] = {"us": round(us_k, 1), "ref_us": round(us_r, 1)}
+
+    # paged_decode: fused block-table attention vs the XLA gather+attend
+    # baseline it replaces.  "us" is the auto dispatch (fused kernel on
+    # TPU, XLA ref on CPU); "interp_us" times the kernel body through
+    # the Pallas interpreter (parity-path cost, not a perf figure).
+    for B, Hk, G, hd, page, nb in _PAGED_DECODE[smoke]:
+        n_pages = 1 + B * nb
+        S = nb * page
+        kp = jnp.asarray(rng.standard_normal((n_pages, page, Hk, hd)),
+                         jnp.bfloat16)
+        vp = jnp.asarray(rng.standard_normal((n_pages, page, Hk, hd)),
+                         jnp.bfloat16)
+        bt = jnp.asarray(
+            rng.permutation(np.arange(1, n_pages))[: B * nb].reshape(B, nb),
+            jnp.int32)
+        q = jnp.asarray(rng.standard_normal((B, 1, Hk * G, hd)), jnp.float32)
+        pos = jnp.asarray(rng.integers(S // 2, S, B), jnp.int32)
+        us_k = time_fn(lambda *a: ops.paged_decode_gqa(*a), q, kp, vp, bt, pos)
+        us_r = time_fn(lambda *a: ops.paged_decode_gqa(*a, backend="xla"),
+                       q, kp, vp, bt, pos)
+        us_i = time_fn(
+            lambda *a: ops.paged_decode_gqa(*a, backend="pallas_interpret"),
+            q, kp, vp, bt, pos)
+        toks = round(B / us_k * 1e6, 1)
+        kv_bytes = 2 * B * S * Hk * hd * kp.dtype.itemsize   # K+V read
+        name = f"paged_decode.B{B}xS{S}xH{Hk * G}x{hd}"
+        emit(name, us_k, f"ref_us={us_r:.1f} interp_us={us_i:.1f} "
+             f"tokens_per_s={toks:.4g}")
+        kernels[name] = {
+            "us": round(us_k, 1), "ref_us": round(us_r, 1),
+            "interp_us": round(us_i, 1), "tokens_per_s": toks,
+            "kv_bytes_per_step": kv_bytes,
+        }
+
+    # prefix_prefill: fused [ctx ; causal tail] vs concat+prefix_attention
+    for B, T, Hk, G, hd, L in _PREFIX[smoke]:
+        kc = jnp.asarray(rng.standard_normal((B, L, Hk, hd)), jnp.float32)
+        vc = jnp.asarray(rng.standard_normal((B, L, Hk, hd)), jnp.float32)
+        kt = jnp.asarray(rng.standard_normal((B, T, Hk, hd)), jnp.float32)
+        vt = jnp.asarray(rng.standard_normal((B, T, Hk, hd)), jnp.float32)
+        q = jnp.asarray(rng.standard_normal((B, T, Hk * G, hd)), jnp.float32)
+        ctx = jnp.asarray(rng.integers(0, L + 1, B), jnp.int32)
+        us_k = time_fn(lambda *a: ops.prefix_prefill(*a), q, kc, vc, kt, vt, ctx)
+        us_r = time_fn(lambda *a: ops.prefix_prefill(*a, backend="xla"),
+                       q, kc, vc, kt, vt, ctx)
+        us_i = time_fn(
+            lambda *a: ops.prefix_prefill(*a, backend="pallas_interpret"),
+            q, kc, vc, kt, vt, ctx)
+        toks = round(B * T / us_k * 1e6, 1)
+        score_bytes = 4 * B * Hk * G * T * (L + T)   # f32 scores the XLA path
+        name = f"prefix_prefill.B{B}xT{T}xL{L}xH{Hk * G}x{hd}"
+        emit(name, us_k, f"ref_us={us_r:.1f} interp_us={us_i:.1f} "
+             f"tokens_per_s={toks:.4g}")
+        kernels[name] = {
+            "us": round(us_k, 1), "ref_us": round(us_r, 1),
+            "interp_us": round(us_i, 1), "tokens_per_s": toks,
+            "xla_score_bytes": score_bytes,
+        }
 
     # composed FP-DCIM matmul vs f32 matmul accuracy+speed
     x = jnp.asarray(rng.normal(size=(64, 256)).astype(np.float32))

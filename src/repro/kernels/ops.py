@@ -1,24 +1,126 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public jit'd wrappers around the Pallas kernels, and the backend
+dispatch layer.
 
-On TPU the kernels run compiled (``interpret=False``); on CPU they run in
-Pallas interpret mode, which lowers the kernel body to regular XLA ops —
-bit-exact with the TPU path and still jit-compatible.  ``interpret`` is
-auto-detected from the default backend unless forced.
+On TPU the kernels run compiled (``interpret=False``).  Off TPU every
+public entry point auto-falls back to a bit-identical XLA reference —
+the Pallas interpreter lowers the kernel body to XLA ops too, but pays
+a large tracing/compile overhead per call (BENCH_kernels.json showed
+interpreter-mode ``dcim_mvm`` at ~60x its XLA structural ref on CPU),
+so the interpreter is reserved for parity tests, which force it with
+``interpret=True`` / ``AttnBackend.PALLAS_INTERPRET``.
+
+The attention dispatchers (:func:`paged_decode_gqa`,
+:func:`paged_decode_mla`, :func:`prefix_prefill`) follow the same
+pattern behind the :class:`AttnBackend` enum; ``LMConfig.attn_backend``
+threads the choice through the serving stack with zero call-site churn.
 """
 from __future__ import annotations
 
+import enum
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
 
 from . import dcim_mvm as _mvm
 from . import fp_prealign as _pre
+from . import paged_attention as _pa
 from . import pareto_rank as _rank
+from . import ref as _ref
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# --- attention backend dispatch ----------------------------------------------
+class AttnBackend(str, enum.Enum):
+    """Which implementation serves the paged-attention entry points.
+
+    AUTO resolves to PALLAS on TPU and XLA elsewhere.  The XLA path is
+    the original gather+attend reference in ``repro.models.attention``;
+    PALLAS is the fused kernel in ``repro.kernels.paged_attention``
+    (bitwise identical — asserted in tests/test_paged_attention.py);
+    PALLAS_INTERPRET forces the Pallas interpreter off-TPU so parity
+    tests and end-to-end serving runs exercise the kernel body on CPU.
+    """
+
+    AUTO = "auto"
+    XLA = "xla"
+    PALLAS = "pallas"
+    PALLAS_INTERPRET = "pallas_interpret"
+
+
+def resolve_attn_backend(backend=None) -> AttnBackend:
+    b = AttnBackend(backend) if backend else AttnBackend.AUTO
+    if b is AttnBackend.AUTO:
+        return AttnBackend.XLA if _interpret_default() else AttnBackend.PALLAS
+    return b
+
+
+def paged_decode_gqa(q, k_pages, v_pages, block_table, pos, backend=None):
+    """Paged GQA decode attention: (B, 1, H, hd) q against the slot's
+    pages.  XLA: gather a contiguous per-slot view, run
+    ``decode_attention``.  PALLAS: the fused block-table kernel."""
+    b = resolve_attn_backend(backend)
+    if b is AttnBackend.XLA:
+        from repro.models import attention as _attn
+
+        return _attn.decode_attention(
+            q,
+            _attn._gather_pages(k_pages, block_table),
+            _attn._gather_pages(v_pages, block_table),
+            pos,
+        )
+    return _pa.paged_decode_gqa_pallas(
+        q, k_pages, v_pages, block_table, pos,
+        interpret=b is AttnBackend.PALLAS_INTERPRET,
+    )
+
+
+def paged_decode_mla(q_abs, q_rope, ckv_pages, krope_pages, block_table,
+                     pos, scale: float, backend=None):
+    """Paged absorbed-MLA decode in the compressed c_kv space; returns
+    the (B, 1, H, r) f32 context (``w_uv`` up-projection stays with the
+    caller)."""
+    b = resolve_attn_backend(backend)
+    if b is AttnBackend.XLA:
+        from repro.models import attention as _attn
+
+        return _attn.mla_attend_core(
+            q_abs, q_rope,
+            _attn._gather_pages(ckv_pages, block_table),
+            _attn._gather_pages(krope_pages, block_table),
+            pos, scale,
+        )
+    return _pa.paged_decode_mla_pallas(
+        q_abs, q_rope, ckv_pages, krope_pages, block_table, pos, scale,
+        interpret=b is AttnBackend.PALLAS_INTERPRET,
+    )
+
+
+def prefix_prefill(q, k_ctx, v_ctx, k_tail, v_tail, ctx_len, backend=None):
+    """[reused-context ; causal-tail] prefill attention.  ``k_ctx`` /
+    ``v_ctx`` are None when the prefix machinery is compiled out (L=0).
+    XLA: concatenate and run ``prefix_attention``; PALLAS: the fused
+    kernel (no HBM concat, no (B, Hk, G, T, L+T) score tensor)."""
+    b = resolve_attn_backend(backend)
+    if b is AttnBackend.XLA:
+        from repro.models import attention as _attn
+
+        if k_ctx is None:
+            return _attn.prefix_attention(q, k_tail, v_tail, ctx_len, 0)
+        return _attn.prefix_attention(
+            q,
+            jnp.concatenate([k_ctx, k_tail], axis=1),
+            jnp.concatenate([v_ctx, v_tail], axis=1),
+            ctx_len, k_ctx.shape[1],
+        )
+    return _pa.prefix_prefill_pallas(
+        q, k_ctx, v_ctx, k_tail, v_tail, ctx_len,
+        interpret=b is AttnBackend.PALLAS_INTERPRET,
+    )
 
 
 # --- pareto_rank -------------------------------------------------------------
@@ -48,6 +150,10 @@ def dominance_matrix(F, violation=None, interpret: bool | None = None):
 
 
 # --- dcim_mvm ----------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("B_x", "B_w", "k", "x_signed", "w_signed", "interpret"),
+)
 def dcim_mvm(
     x,
     w,
@@ -58,7 +164,20 @@ def dcim_mvm(
     w_signed: bool = True,
     interpret: bool | None = None,
 ):
-    """Exact integer matmul through the DCIM bit-serial dataflow."""
+    """Exact integer matmul through the DCIM bit-serial dataflow.
+
+    Off TPU (``interpret=None`` auto-detection) this dispatches to the
+    XLA structural reference — the same bit-serial decomposition in
+    plain jnp, bitwise identical to the kernel (tested in
+    tests/test_kernels.py) and much faster than interpreter mode on
+    CPU (jitted here: the decomposition's many slice/shift ops would
+    otherwise pay per-op eager dispatch).  ``interpret=True`` forces
+    the Pallas interpreter (parity tests do)."""
+    if interpret is None and _interpret_default():
+        return _ref.dcim_mvm_structural_ref(
+            jnp.asarray(x), jnp.asarray(w), B_x=B_x, B_w=B_w, k=k,
+            x_signed=x_signed, w_signed=w_signed,
+        )
     return _mvm.dcim_mvm_pallas(
         jnp.asarray(x),
         jnp.asarray(w),
@@ -67,20 +186,27 @@ def dcim_mvm(
         k=k,
         x_signed=x_signed,
         w_signed=w_signed,
-        interpret=_interpret_default() if interpret is None else interpret,
+        interpret=False if interpret is None else interpret,
     )
 
 
 # --- fp_prealign ---------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("H", "B_M", "interpret"))
 def fp_prealign(x, H: int, B_M: int = 8, interpret: bool | None = None):
     """x: (M, K) f32, groups of H along K -> (mant (M, G, H) int32,
-    group biased exponents (M, G) int32)."""
+    group biased exponents (M, G) int32).
+
+    Off TPU (``interpret=None``) dispatches to the frexp-based XLA
+    reference (bitwise identical, tested in tests/test_kernels.py);
+    ``interpret=True`` forces the Pallas interpreter."""
     M, K = x.shape
     assert K % H == 0, f"K={K} not divisible by group height H={H}"
     xg = jnp.asarray(x, jnp.float32).reshape(M, K // H, H)
+    if interpret is None and _interpret_default():
+        return _ref.fp_prealign_ref(xg, B_M=B_M)
     return _pre.fp_prealign_pallas(
         xg, B_M=B_M,
-        interpret=_interpret_default() if interpret is None else interpret,
+        interpret=False if interpret is None else interpret,
     )
 
 
@@ -108,7 +234,10 @@ def dcim_fp_matmul(
     x: (M, K) f32;  w: (K, N) f32;  returns (M, N) f32 approximating x @ w
     with block-FP (shared-group-exponent) numerics.
     """
-    interp = _interpret_default() if interpret is None else interpret
+    # ``interpret`` stays tri-state through the public dispatchers:
+    # None auto-falls back to the XLA refs off TPU, True forces the
+    # Pallas interpreter end to end (parity tests).
+    interp = interpret
     M, K = x.shape
     K2, N = w.shape
     assert K == K2 and K % H == 0
@@ -117,8 +246,6 @@ def dcim_fp_matmul(
     mant_x, ex = fp_prealign(x, H, B_M, interpret=interp)          # (M,G,H),(M,G)
     mant_w, ew = fp_prealign(w.T, H, B_w, interpret=interp)        # (N,G,H),(N,G)
 
-    import math
-
     narrow = (B_M + 1) + (B_w + 1) + math.ceil(math.log2(H)) <= 31
 
     if narrow:
@@ -126,7 +253,7 @@ def dcim_fp_matmul(
         # accumulator fits).  vmap over groups; each group is an exact
         # integer matmul through the bit-serial kernel.
         def group_mm(mx, mw):                                      # (M,H),(N,H)
-            return _mvm.dcim_mvm_pallas(
+            return dcim_mvm(
                 mx, mw.T, B_x=B_M + 1, B_w=B_w + 1, k=k,
                 x_signed=True, w_signed=True, interpret=interp,
             ).astype(jnp.float32)
@@ -149,7 +276,7 @@ def dcim_fp_matmul(
             wh, wl = mw >> SPLIT, mw & ((1 << SPLIT) - 1)
 
             def mm(a, b, bx, bw, xs, ws):
-                return _mvm.dcim_mvm_pallas(
+                return dcim_mvm(
                     a, b.T, B_x=bx, B_w=bw, k=k,
                     x_signed=xs, w_signed=ws, interpret=interp,
                 ).astype(jnp.float32)
@@ -240,6 +367,46 @@ def _build_kernels_contract() -> Built:
             jnp.zeros((B, S, N), jnp.float32),
             -jnp.ones((D, N), jnp.float32),
             jnp.zeros((D,), jnp.float32),
+        ),
+        interpret_fallback=fallback,
+    ))
+
+    # Fused paged-attention kernels, at TPU-representative shapes
+    # (hd = 128 lanes).  Their block-table / position index maps take
+    # scalar-prefetch refs, which the grid-coverage evaluator cannot
+    # replay — that surfaces as a lint *warning*, by design.
+    Bd, Hk, G, hd = 2, 2, 4, 128
+    page, nb = 8, 3
+    traces.append(PallasTrace(
+        "paged_attention.paged_decode_gqa_pallas",
+        jax.make_jaxpr(
+            lambda q, kp, vp, bt, ps: _pa.paged_decode_gqa_pallas(
+                q, kp, vp, bt, ps, interpret=True
+            )
+        )(
+            jnp.zeros((Bd, 1, Hk * G, hd), jnp.float32),
+            jnp.zeros((nb * Bd + 1, page, Hk, hd), jnp.bfloat16),
+            jnp.zeros((nb * Bd + 1, page, Hk, hd), jnp.bfloat16),
+            jnp.zeros((Bd, nb), jnp.int32),
+            jnp.zeros((Bd,), jnp.int32),
+        ),
+        interpret_fallback=fallback,
+    ))
+
+    T, L = 8, 16
+    traces.append(PallasTrace(
+        "paged_attention.prefix_prefill_pallas",
+        jax.make_jaxpr(
+            lambda q, kc, vc, kt, vt, cl: _pa.prefix_prefill_pallas(
+                q, kc, vc, kt, vt, cl, interpret=True
+            )
+        )(
+            jnp.zeros((Bd, T, Hk * G, hd), jnp.float32),
+            jnp.zeros((Bd, L, Hk, hd), jnp.bfloat16),
+            jnp.zeros((Bd, L, Hk, hd), jnp.bfloat16),
+            jnp.zeros((Bd, T, Hk, hd), jnp.bfloat16),
+            jnp.zeros((Bd, T, Hk, hd), jnp.bfloat16),
+            jnp.zeros((Bd,), jnp.int32),
         ),
         interpret_fallback=fallback,
     ))

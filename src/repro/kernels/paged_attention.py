@@ -1,0 +1,287 @@
+"""Fused paged-attention Pallas kernels (vLLM-style).
+
+Decode: one kernel reads K/V pages THROUGH the block table — the
+``(B, nb)`` page list and the ``(B,)`` position vector are scalar-
+prefetched (``PrefetchScalarGridSpec``) so the BlockSpec index maps can
+steer each grid step's DMA at the page the slot actually owns.  Pages
+stream into a VMEM scratch gather buffer; at the slot's last page the
+kernel runs the masked attend over the full gathered sequence.  The XLA
+path this replaces (``attention._gather_pages`` + ``decode_attention``)
+materializes a contiguous ``(B, nb * page, ...)`` HBM copy of every
+slot's pages per layer per step; here the gather lives only in VMEM.
+
+Prefill: one kernel attends ``[reused-context ; causal tail]`` without
+ever materializing the concatenated K/V or the ``(B, Hk, G, T, L+T)``
+score tensor in HBM — context and tail blocks are copied side by side
+into a VMEM scratch (the "concat" is per-cell, on-chip) and scores live
+per (batch row, q tile) in VMEM.
+
+Bitwise parity: every kernel keeps the reference path's exact compute
+structure — one masked single-normalization softmax over the full key
+axis and single dot-generals for scores and PV (NOT a rescaling online-
+softmax accumulation, which changes summation trees and breaks the
+serving stack's token-exactness contracts).  Page-granular gathering is
+safe because each score element is an independent dot over the head
+dim; masking, softmax and the PV contraction run over the full gathered
+axis exactly as ``attention.decode_attention`` / ``prefix_attention``
+do.  Parity is asserted bitwise in tests/test_paged_attention.py.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ----------------------------- decode: GQA -----------------------------------
+def _decode_gqa_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                       k_s, v_s, *, page: int, nb: int):
+    """Grid (B, nb), pages innermost.  Each step DMAs one page of K/V
+    (selected by the block-table index maps) into the gather scratch; the
+    last page runs mask + softmax + PV over the full sequence."""
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    k_s[pl.ds(i * page, page)] = k_ref[0]
+    v_s[pl.ds(i * page, page)] = v_ref[0]
+
+    @pl.when(i == nb - 1)
+    def _attend():
+        S = nb * page
+        s = jnp.einsum(
+            "hgd,shd->hgs", q_ref[0], k_s[...],
+            preferred_element_type=jnp.float32,
+        )
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, S), 2)
+        s = jnp.where(iota <= pos_ref[b], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_ref[0] = jnp.einsum(
+            "hgs,shd->hgd", p.astype(v_s.dtype), v_s[...],
+            preferred_element_type=jnp.float32,
+        )
+
+
+def paged_decode_gqa_pallas(q, k_pages, v_pages, block_table, pos,
+                            interpret: bool = False):
+    """Fused paged GQA decode.
+
+    q: (B, 1, H, hd); k_pages/v_pages: (n_pages, page, Hk, hd[v]);
+    block_table: (B, nb) int32 page ids; pos: (B,) int32 per-row
+    lengths.  Returns (B, 1, H, hdv) f32 — bitwise identical to
+    ``decode_attention(q, gather(k), gather(v), pos)``.  Rows whose
+    table points at the reserved garbage page 0 (inactive slots, pos
+    clamped to 0) are handled by the mask exactly as in the reference.
+    """
+    B, _, H, hd = q.shape
+    _, page, Hk, _ = k_pages.shape
+    hdv = v_pages.shape[-1]
+    G = H // Hk
+    nb = block_table.shape[1]
+    S = nb * page
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, Hk, G, hd)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_gqa_kernel, page=page, nb=nb),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nb),
+            in_specs=[
+                pl.BlockSpec((1, Hk, G, hd), lambda b, i, bt, ps: (b, 0, 0, 0)),
+                pl.BlockSpec(
+                    (1, page, Hk, hd), lambda b, i, bt, ps: (bt[b, i], 0, 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, page, Hk, hdv), lambda b, i, bt, ps: (bt[b, i], 0, 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, Hk, G, hdv), lambda b, i, bt, ps: (b, 0, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((S, Hk, hd), k_pages.dtype),
+                pltpu.VMEM((S, Hk, hdv), v_pages.dtype),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hk, G, hdv), jnp.float32),
+        interpret=interpret,
+    )(block_table, pos, qg, k_pages, v_pages)
+    return out.reshape(B, 1, H, hdv)
+
+
+# ----------------------------- decode: MLA -----------------------------------
+def _decode_mla_kernel(bt_ref, pos_ref, qa_ref, qr_ref, c_ref, r_ref, o_ref,
+                       c_s, r_s, *, page: int, nb: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    c_s[pl.ds(i * page, page)] = c_ref[0]
+    r_s[pl.ds(i * page, page)] = r_ref[0]
+
+    @pl.when(i == nb - 1)
+    def _attend():
+        S = nb * page
+        ckv = c_s[...].astype(jnp.float32)
+        krope = r_s[...].astype(jnp.float32)
+        s = (
+            jnp.einsum("hr,sr->hs", qa_ref[0], ckv,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("hd,sd->hs", qr_ref[0], krope,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        iota = jax.lax.broadcasted_iota(jnp.int32, (1, S), 1)
+        s = jnp.where(iota <= pos_ref[b], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_ref[0] = jnp.einsum(
+            "hs,sr->hr", p, ckv, preferred_element_type=jnp.float32
+        )
+
+
+def paged_decode_mla_pallas(q_abs, q_rope, ckv_pages, krope_pages,
+                            block_table, pos, scale: float,
+                            interpret: bool = False):
+    """Fused paged absorbed-MLA decode, in the compressed c_kv space.
+
+    q_abs: (B, 1, H, r) f32 absorbed queries; q_rope: (B, 1, H, dr);
+    ckv_pages: (n_pages, page, r); krope_pages: (n_pages, page, dr).
+    Returns the (B, 1, H, r) f32 context (the ``w_uv`` up-projection
+    stays outside) — bitwise identical to ``mla_attend_core`` over the
+    gathered per-slot views.  ``scale`` multiplies the SUMMED nope+rope
+    scores, matching the reference's post-sum scaling."""
+    B, _, H, r = q_abs.shape
+    dr = q_rope.shape[-1]
+    _, page, _ = ckv_pages.shape
+    nb = block_table.shape[1]
+    S = nb * page
+    qa = q_abs.astype(jnp.float32).reshape(B, H, r)
+    qr = q_rope.astype(jnp.float32).reshape(B, H, dr)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_mla_kernel, page=page, nb=nb, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, nb),
+            in_specs=[
+                pl.BlockSpec((1, H, r), lambda b, i, bt, ps: (b, 0, 0)),
+                pl.BlockSpec((1, H, dr), lambda b, i, bt, ps: (b, 0, 0)),
+                pl.BlockSpec(
+                    (1, page, r), lambda b, i, bt, ps: (bt[b, i], 0, 0)
+                ),
+                pl.BlockSpec(
+                    (1, page, dr), lambda b, i, bt, ps: (bt[b, i], 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, H, r), lambda b, i, bt, ps: (b, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((S, r), ckv_pages.dtype),
+                pltpu.VMEM((S, dr), krope_pages.dtype),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, r), jnp.float32),
+        interpret=interpret,
+    )(block_table, pos, qa, qr, ckv_pages, krope_pages)
+    return out.reshape(B, 1, H, r)
+
+
+# ------------------------- prefill: [ctx ; causal tail] -----------------------
+def _prefix_kernel(ctx_ref, q_ref, *refs, L: int, T: int, Tt: int):
+    """Grid (B, Tp // Tt), q tiles innermost.  At each row's first tile
+    the context and tail K/V blocks are copied side by side into the
+    gather scratch (the on-chip "concat"); every tile then runs one
+    masked softmax + PV over the full L+T axis."""
+    if L:
+        kc_ref, vc_ref, kt_ref, vt_ref, o_ref, k_s, v_s = refs
+    else:
+        kt_ref, vt_ref, o_ref, k_s, v_s = refs
+    b = pl.program_id(0)
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _load():
+        if L:
+            k_s[pl.ds(0, L)] = kc_ref[0]
+            v_s[pl.ds(0, L)] = vc_ref[0]
+        k_s[pl.ds(L, T)] = kt_ref[0]
+        v_s[pl.ds(L, T)] = vt_ref[0]
+
+    s = jnp.einsum(
+        "qhgd,shd->hgqs", q_ref[0], k_s[...],
+        preferred_element_type=jnp.float32,
+    )                                               # (Hk, G, Tt, L+T)
+    col = jax.lax.broadcasted_iota(jnp.int32, (Tt, L + T), 1)
+    row = jax.lax.broadcasted_iota(jnp.int32, (Tt, L + T), 0) + t * Tt
+    mask = jnp.where(col < L, col < ctx_ref[b], (col - L) <= row)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o_ref[0] = jnp.einsum(
+        "hgqs,shd->qhgd", p.astype(v_s.dtype), v_s[...],
+        preferred_element_type=jnp.float32,
+    )
+
+
+def prefix_prefill_pallas(q, k_ctx, v_ctx, k_tail, v_tail, ctx_len,
+                          tail_block: int = 8, interpret: bool = False):
+    """Fused [reused-context ; causal-tail] prefill attention.
+
+    q: (B, T, H, hd) tail queries at absolute positions ctx_len + t;
+    k_ctx/v_ctx: (B, L, Hk, hd[v]) gathered context pages (None when
+    the scheduler compiles the prefix machinery out — L == 0);
+    k_tail/v_tail: (B, T, Hk, hd[v]); ctx_len: (B,) int32 valid context
+    lengths.  Returns (B, T, H, hdv) f32 — bitwise identical to
+    ``prefix_attention(q, concat([k_ctx, k_tail]), ..., ctx_len, L)``
+    without materializing the concat or the (B, Hk, G, T, L+T) score
+    tensor in HBM.  T is tiled by ``tail_block`` (softmax rows are
+    per-query, so tiling cannot change any output bit); q is zero-padded
+    up to the tile multiple and the pad rows sliced off."""
+    B, T, H, hd = q.shape
+    Hk = k_tail.shape[2]
+    hdv = v_tail.shape[-1]
+    G = H // Hk
+    L = 0 if k_ctx is None else k_ctx.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    qg = (q * scale).reshape(B, T, Hk, G, hd)
+    Tt = min(tail_block, T)
+    Tp = -(-T // Tt) * Tt
+    if Tp != T:
+        qg = jnp.pad(qg, ((0, 0), (0, Tp - T), (0, 0), (0, 0), (0, 0)))
+
+    def _idx_q(b, t, ctx):
+        return (b, t, 0, 0, 0)
+
+    def _idx_kv(b, t, ctx):
+        return (b, 0, 0, 0)
+
+    in_specs = [pl.BlockSpec((1, Tt, Hk, G, hd), _idx_q)]
+    operands = [qg]
+    if L:
+        in_specs += [
+            pl.BlockSpec((1, L, Hk, hd), _idx_kv),
+            pl.BlockSpec((1, L, Hk, hdv), _idx_kv),
+        ]
+        operands += [k_ctx, v_ctx]
+    in_specs += [
+        pl.BlockSpec((1, T, Hk, hd), _idx_kv),
+        pl.BlockSpec((1, T, Hk, hdv), _idx_kv),
+    ]
+    operands += [k_tail, v_tail]
+
+    out = pl.pallas_call(
+        functools.partial(_prefix_kernel, L=L, T=T, Tt=Tt),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Tp // Tt),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, Tt, Hk, G, hdv), _idx_q),
+            scratch_shapes=[
+                pltpu.VMEM((L + T, Hk, hd), k_tail.dtype),
+                pltpu.VMEM((L + T, Hk, hdv), v_tail.dtype),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Tp, Hk, G, hdv), jnp.float32),
+        interpret=interpret,
+    )(ctx_len, *operands)
+    return out[:, :T].reshape(B, T, H, hdv)

@@ -4,6 +4,13 @@ and DeepSeek-style MLA (low-rank Q/KV, absorbed decode).
 Layouts: activations are (B, S, H, hd); caches are (B, S_max, Hk, hd)
 (GQA) or (B, S_max, r_kv)/(B, S_max, d_rope) (MLA compressed cache —
 the whole point of MLA).
+
+The paged serving paths (``*_apply_decode_paged`` / ``*_apply_prefix``)
+route their attention core through ``repro.kernels.ops`` behind the
+``AttnBackend`` enum (``cfg.attn_backend``): the fused Pallas
+paged-attention kernels on TPU, this module's gather+attend reference
+elsewhere — bitwise identical by construction (single-normalization
+softmax on both sides; asserted in tests/test_paged_attention.py).
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import shard_act
+from repro.kernels import ops as kops
 from . import common
 from .common import apply_mrope, apply_rope, dense, dense_init
 
@@ -287,8 +295,11 @@ def gqa_apply_decode_paged(p, x, cfg, cache, block_table, pos):
     scatters into page ``bt[b, pos // page]`` row ``pos % page`` (always
     a page the slot owns alone — shared prefix pages are fully covered
     by the prompt and decode writes start at the prompt end), then the
-    slot's pages gather into a contiguous (B, nb * page, ...) view for
-    the same masked ``decode_attention`` the monolithic path runs."""
+    attention runs through ``kops.paged_decode_gqa``: on the XLA backend
+    the slot's pages gather into a contiguous (B, nb * page, ...) view
+    for the same masked ``decode_attention`` the monolithic path runs;
+    on the Pallas backend the fused kernel reads the pages through the
+    block table in VMEM (bitwise identical)."""
     B = x.shape[0]
     q, k, v = gqa_qkv(p, x, cfg, pos[:, None])
     page = cache["k"].shape[1]
@@ -296,9 +307,8 @@ def gqa_apply_decode_paged(p, x, cfg, cache, block_table, pos):
     rw = pos % page
     k_pages = cache["k"].at[pg, rw].set(k[:, 0].astype(cache["k"].dtype))
     v_pages = cache["v"].at[pg, rw].set(v[:, 0].astype(cache["v"].dtype))
-    o = decode_attention(
-        q, _gather_pages(k_pages, block_table),
-        _gather_pages(v_pages, block_table), pos,
+    o = kops.paged_decode_gqa(
+        q, k_pages, v_pages, block_table, pos, backend=cfg.attn_backend
     )
     y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
     return y, {"k": k_pages, "v": v_pages}
@@ -325,12 +335,11 @@ def gqa_apply_prefix(p, x, cfg, cache, block_table, ctx_len, wr_pg, wr_rw,
     if use_context:
         k_ctx = _gather_pages(cache["k"], block_table).astype(k.dtype)
         v_ctx = _gather_pages(cache["v"], block_table).astype(v.dtype)
-        k_all = jnp.concatenate([k_ctx, k], axis=1)
-        v_all = jnp.concatenate([v_ctx, v], axis=1)
-        L = k_ctx.shape[1]
     else:
-        k_all, v_all, L = k, v, 0
-    o = prefix_attention(q, k_all, v_all, ctx_len, L)
+        k_ctx = v_ctx = None
+    o = kops.prefix_prefill(
+        q, k_ctx, v_ctx, k, v, ctx_len, backend=cfg.attn_backend
+    )
     k_pages = cache["k"].at[wr_pg, wr_rw].set(k.astype(cache["k"].dtype))
     v_pages = cache["v"].at[wr_pg, wr_rw].set(v.astype(cache["v"].dtype))
     y = dense(p["wo"], o.reshape(B, T, -1).astype(x.dtype))
@@ -426,18 +435,27 @@ def _mla_absorb_weights(p, cfg):
     return w_kv_b[:, :, : m.qk_nope_dim], w_kv_b[:, :, m.qk_nope_dim:]
 
 
-def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv, krope, pos):
-    """One absorbed-MLA decode attention: scores and context computed in
-    the compressed c_kv space against a (B, S, r_kv)/(B, S, d_rope)
-    cache view.  ``pos`` is a scalar or a (B,) vector; rows past ``pos``
-    are masked.  Shared by the monolithic and paged decode paths so the
-    two can never diverge numerically."""
+def _mla_absorb_q(p, cfg, q_nope):
+    """Absorb ``w_uk`` into the nope queries: returns the (B, q, H, r)
+    f32 absorbed queries, the post-sum score scale, and ``w_uv`` for the
+    caller's up-projection."""
     m: MLAConfig = cfg.mla
-    B = q_nope.shape[0]
     w_uk, w_uv = _mla_absorb_weights(p, cfg)
-
-    q_abs = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    q_abs = jnp.einsum(
+        "bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
+    )
     scale = 1.0 / math.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    return q_abs, scale, w_uv
+
+
+def mla_attend_core(q_abs, q_rope, ckv, krope, pos, scale):
+    """The absorbed-MLA masked attend over contiguous cache views:
+    scores and context computed in the compressed c_kv space.  ``pos``
+    is a scalar or a (B,) vector; rows past ``pos`` are masked.  Returns
+    the (B, q, H, r) f32 context — ``w_uv`` stays with the caller.  This
+    is the XLA reference the fused ``paged_decode_mla_pallas`` kernel is
+    bitwise-checked against (and the shared core of the monolithic and
+    paged decode paths, so the two can never diverge numerically)."""
     s = (
         jnp.einsum("bqhr,bsr->bhqs", q_abs, ckv.astype(jnp.float32))
         + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
@@ -450,7 +468,14 @@ def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv, krope, pos):
         mask = jnp.arange(S_max) <= pos
         s = jnp.where(mask[None, None, None], s, NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))
+    return jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))
+
+
+def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv, krope, pos):
+    """One absorbed-MLA decode attention against a contiguous
+    (B, S, r_kv)/(B, S, d_rope) cache view: absorb, attend, up-project."""
+    q_abs, scale, w_uv = _mla_absorb_q(p, cfg, q_nope)
+    ctx = mla_attend_core(q_abs, q_rope, ckv, krope, pos, scale)
     return jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
 
 
@@ -482,8 +507,9 @@ def mla_apply_decode(p, x, cfg, cache, pos):
 def mla_apply_decode_paged(p, x, cfg, cache, block_table, pos):
     """Absorbed MLA decode through a paged compressed cache: pages are
     (n_pages, page, r_kv)/(n_pages, page, d_rope); the new row scatters
-    into the slot's page at ``pos`` and the block table gathers the
-    contiguous per-slot view for ``_mla_absorbed_attend``."""
+    into the slot's page at ``pos``, then ``kops.paged_decode_mla`` runs
+    ``mla_attend_core`` over the block table — via an XLA gather or the
+    fused Pallas kernel, per ``cfg.attn_backend``."""
     B = x.shape[0]
     q_nope, q_rope = _mla_q(p, x, cfg, pos[:, None])
     c_new, kr_new = _mla_ckv(p, x, cfg, pos[:, None])
@@ -492,11 +518,12 @@ def mla_apply_decode_paged(p, x, cfg, cache, block_table, pos):
     rw = pos % page
     ckv_pages = cache["c_kv"].at[pg, rw].set(c_new[:, 0].astype(cache["c_kv"].dtype))
     kr_pages = cache["k_rope"].at[pg, rw].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
-    o = _mla_absorbed_attend(
-        p, cfg, q_nope, q_rope,
-        _gather_pages(ckv_pages, block_table),
-        _gather_pages(kr_pages, block_table), pos,
+    q_abs, scale, w_uv = _mla_absorb_q(p, cfg, q_nope)
+    ctx = kops.paged_decode_mla(
+        q_abs, q_rope, ckv_pages, kr_pages, block_table, pos, scale,
+        backend=cfg.attn_backend,
     )
+    o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
     y = dense(p["wo"], o.reshape(B, 1, -1).astype(x.dtype))
     return y, {"c_kv": ckv_pages, "k_rope": kr_pages}
 
@@ -533,7 +560,15 @@ def mla_apply_prefix(p, x, cfg, cache, block_table, ctx_len, wr_pg, wr_rw,
         axis=-1,
     )
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
-    o = prefix_attention(q, k, v, ctx_len, L)
+    # Hand ctx/tail slices to the dispatcher: the XLA backend re-concats
+    # them (bitwise a no-op), the Pallas backend attends them fused.
+    o = kops.prefix_prefill(
+        q,
+        k[:, :L] if L else None,
+        v[:, :L] if L else None,
+        k[:, L:], v[:, L:], ctx_len,
+        backend=cfg.attn_backend,
+    )
 
     ckv_pages = cache["c_kv"].at[wr_pg, wr_rw].set(c_kv.astype(cache["c_kv"].dtype))
     kr_pages = cache["k_rope"].at[wr_pg, wr_rw].set(k_rope.astype(cache["k_rope"].dtype))

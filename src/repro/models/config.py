@@ -62,6 +62,10 @@ class LMConfig:
     loss_chunk: int = 0               # 0: unchunked CE
     ssm_impl: str = "assoc"           # assoc | pallas (fused kernel, fwd-only)
     cache_dtype: str = "bfloat16"
+    # Paged-attention implementation: auto | xla | pallas | pallas_interpret
+    # (kernels.ops.AttnBackend; auto = fused Pallas kernels on TPU, the
+    # bit-identical XLA gather+attend reference elsewhere).
+    attn_backend: str = "auto"
 
     @property
     def pdtype(self):
@@ -117,4 +121,7 @@ class LMConfig:
             assert self.mla is not None
         if self.pos == "mrope":
             assert sum(self.mrope_sections) == self.hd // 2
+        assert self.attn_backend in ("auto", "xla", "pallas", "pallas_interpret"), (
+            self.attn_backend
+        )
         return self

@@ -452,7 +452,13 @@ def decode_step_paged(params, inputs, pos, pool, block_tables, cfg: LMConfig):
     THROUGH the block tables (``(B, max_len // page_size)`` int32 page
     ids per slot) inside the one jitted program.  ``pos`` is the (B,)
     per-slot length vector; masking makes the result bitwise identical
-    to ``decode_step`` over equivalent monolithic per-slot caches."""
+    to ``decode_step`` over equivalent monolithic per-slot caches.
+
+    The attention core dispatches on ``cfg.attn_backend``
+    (``kernels.ops.AttnBackend``): the fused paged-attention Pallas
+    kernels on TPU, the XLA gather+attend reference elsewhere — the
+    backends are bitwise identical, so this program's exactness
+    contracts are backend-independent."""
     x = embed_inputs(params, inputs, cfg, offset=pos[:, None])
     period = cfg.scan_period()
     kinds = [(cfg.mixer_kind(i), cfg.ffn_of(i)) for i in range(period)]

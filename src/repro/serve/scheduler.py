@@ -834,7 +834,13 @@ class Scheduler:
         n_pages: Optional[int] = None,
         prefix_reuse: bool = True,
         burst_prefill: bool = True,
+        attn_backend: Optional[str] = None,
     ):
+        if attn_backend is not None:
+            # Thread the paged-attention backend (kernels.ops.AttnBackend)
+            # through every jitted program via the config — zero call-site
+            # churn; None keeps cfg's own setting (default "auto").
+            cfg = dataclasses.replace(cfg, attn_backend=attn_backend).validate()
         self.cfg = cfg
         self.params = params
         self.max_slots = int(max_slots)

@@ -246,6 +246,53 @@ class TestFpDcimMatmul:
             ops.dcim_fp_matmul(x, w, H=512, B_M=24, B_w=24, k=4)
 
 
+@pytest.mark.skipif(jax.default_backend() == "tpu",
+                    reason="on TPU the wrappers run the compiled kernels")
+class TestCPUAutoFallback:
+    """Off TPU the public wrappers must dispatch to the XLA structural
+    refs — never the Pallas interpreter (~60x slower on CPU) — while
+    ``interpret=True`` still forces the kernel for parity testing."""
+
+    def test_dcim_mvm_no_pallas_in_trace(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.integers(-128, 128, size=(8, 32)).astype(np.int32))
+        w = jnp.asarray(rng.integers(-128, 128, size=(32, 8)).astype(np.int32))
+        jaxpr = jax.make_jaxpr(lambda a, b: ops.dcim_mvm(a, b))(x, w)
+        assert "pallas_call" not in str(jaxpr)
+        interp = jax.make_jaxpr(
+            lambda a, b: ops.dcim_mvm(a, b, interpret=True)
+        )(x, w)
+        assert "pallas_call" in str(interp)
+        np.testing.assert_array_equal(
+            np.asarray(ops.dcim_mvm(x, w)),
+            np.asarray(ops.dcim_mvm(x, w, interpret=True)),
+        )
+
+    def test_fp_prealign_no_pallas_in_trace(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(6, 64)).astype(np.float32))
+        jaxpr = jax.make_jaxpr(lambda a: ops.fp_prealign(a, H=16))(x)
+        assert "pallas_call" not in str(jaxpr)
+        m_auto, e_auto = ops.fp_prealign(x, H=16)
+        m_int, e_int = ops.fp_prealign(x, H=16, interpret=True)
+        np.testing.assert_array_equal(np.asarray(m_auto), np.asarray(m_int))
+        np.testing.assert_array_equal(np.asarray(e_auto), np.asarray(e_int))
+
+    def test_dcim_fp_matmul_routes_through_dispatch(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+        jaxpr = jax.make_jaxpr(
+            lambda a, b: ops.dcim_fp_matmul(a, b, H=32, B_M=8, B_w=8, k=4)
+        )(x, w)
+        assert "pallas_call" not in str(jaxpr)
+        np.testing.assert_array_equal(
+            np.asarray(ops.dcim_fp_matmul(x, w, H=32, B_M=8, B_w=8, k=4)),
+            np.asarray(ops.dcim_fp_matmul(x, w, H=32, B_M=8, B_w=8, k=4,
+                                          interpret=True)),
+        )
+
+
 class TestSelectiveScanKernel:
     @pytest.mark.parametrize("shape", [(1, 8, 8, 4), (2, 64, 32, 8),
                                        (3, 128, 64, 16)])
