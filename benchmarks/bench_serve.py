@@ -28,6 +28,15 @@ same shared-prefix trace served twice through ONE scheduler, whose
 FIRST request — the cold miss of a per-trace pool — now hits the pages
 trace 1 filled), compile nothing new, and serve identical tokens.
 
+A fifth child, ``multitenant``, fires a BURSTY OVERLOAD trace at one
+background-pumped session from concurrent producer threads — three
+priority classes (batch/web/interactive), a bounded queue that sheds
+part of the burst, chunked prefill for the long batch prompts, and
+preemption armed.  It reports p50/p99 submit-to-done latency per
+priority class and the shed count, and FAILS (nonzero exit) if any
+admitted request loses tokens versus an uncontended reference serve of
+the same trace, or if the second burst compiles new programs.
+
 Reports useful tokens/s (only the tokens each request asked for count)
 and p50/p99 request completion latency, cold (first trace, compiles
 included) and warm (second trace).  Paths must produce IDENTICAL greedy
@@ -52,6 +61,7 @@ import pathlib
 import platform
 import subprocess
 import sys
+import threading
 import time
 
 import numpy as np
@@ -209,6 +219,136 @@ def _serve_session(cfg, params, prompts, ntoks, max_len):
     return run(), run()
 
 
+def _multitenant_trace(smoke: bool):
+    """Bursty three-class trace: priority-1 batch jobs with long
+    (chunk-length) prompts and generations, priority-2 web traffic,
+    priority-3 interactive requests with short prompts and tight
+    latency expectations.  Lossless cache dtype so chunked prefill and
+    preemption are active."""
+    import dataclasses
+
+    from repro import configs
+
+    per_class = 6 if smoke else 12
+    rng = np.random.default_rng(11)
+    cfg = dataclasses.replace(
+        configs.get_smoke_config(ARCH), cache_dtype="float32"
+    )
+    prompts, ntoks, prios = [], [], []
+    for prio, plen_pool, ntok_pool in (
+        (1, [28, 36, 40], [6, 8]),
+        (2, [8, 12, 16], [4, 6]),
+        (3, [3, 5, 7], [2, 3]),
+    ):
+        for _ in range(per_class):
+            p = int(rng.choice(plen_pool))
+            prompts.append(rng.integers(0, cfg.vocab_size, p).astype(np.int32))
+            ntoks.append(int(rng.choice(ntok_pool)))
+            prios.append(prio)
+    return cfg, prompts, ntoks, prios, 64
+
+
+def _serve_multitenant(cfg, params, prompts, ntoks, prios, max_len,
+                       smoke: bool):
+    """Two overload bursts from concurrent producers against ONE driven
+    session, then an uncontended reference serve for the token guard."""
+    from repro.serve import Request, Scheduler
+
+    n = len(prompts)
+    # A deliberately tight queue bound: the cold burst's compile-heavy
+    # first steps make 3 producers pile 18 submits onto a 4-deep queue,
+    # so admission control visibly sheds under overload.
+    sched = Scheduler(cfg, params, max_slots=4, max_len=max_len, page_size=8,
+                      max_queue=4, prefill_chunk=8)
+    session = sched.session()
+
+    def burst(rid_base):
+        lock = threading.Lock()
+        waits = []          # (rid, priority, handle, t_submitted)
+        shed = []
+        by_thread = {t: [i for i in range(n) if i % 3 == t] for t in range(3)}
+
+        def producer(tid):
+            for i in by_thread[tid]:
+                req = Request(
+                    prompt=prompts[i], n_tokens=ntoks[i], rid=rid_base + i,
+                    priority=prios[i], tenant=f"class{prios[i]}",
+                )
+                t_sub = time.perf_counter()
+                try:
+                    h = session.submit(req)
+                except ValueError:       # queue overloaded: shed
+                    with lock:
+                        shed.append(i)
+                    continue
+                with lock:
+                    waits.append((i, prios[i], h, t_sub))
+
+        # A burst may span several traces (the session can idle briefly
+        # between producer waves), so per-burst counters are deltas of
+        # the session-lifetime totals, not last_stats of the final trace.
+        pre = (session.total_preemptions, session.total_prefill_chunks,
+               session.total_shed)
+        t0 = time.perf_counter()
+        with session.driving():
+            threads = [threading.Thread(target=producer, args=(t,))
+                       for t in range(3)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            lat_by_class, toks = {}, {}
+            for i, prio, h, t_sub in waits:
+                res = h.wait(timeout=1800)
+                lat_by_class.setdefault(prio, []).append(
+                    time.perf_counter() - t_sub
+                )
+                toks[i] = res.generated
+        wall = time.perf_counter() - t0
+        return {
+            "wall": wall, "toks": toks, "shed": sorted(shed),
+            "lat_by_class": lat_by_class,
+            "preemptions": session.total_preemptions - pre[0],
+            "prefill_chunks": session.total_prefill_chunks - pre[1],
+            "stats_shed": session.total_shed - pre[2],
+            "compiled_programs": sched.compile_counts()["total"],
+        }
+
+    b1 = burst(0)
+    b2 = burst(1000)
+
+    # Uncontended reference: same requests, same rids (same PRNG streams),
+    # fresh scheduler, no queue bound — what each admitted request's
+    # tokens MUST be, independent of interleaving/shedding/preemption.
+    ref_sched = Scheduler(cfg, params, max_slots=4, max_len=max_len,
+                          page_size=8)
+    ref = {r.rid: r.generated
+           for r in ref_sched.serve(
+               [Request(prompt=prompts[i], n_tokens=ntoks[i], rid=i)
+                for i in range(n)]
+           )}
+    ok = True
+    for b, base in ((b1, 0), (b2, 1000)):
+        for i, toks in b["toks"].items():
+            if (len(toks) != ntoks[i]
+                    or not np.array_equal(np.asarray(toks), ref[i])):
+                ok = False
+
+    # Compile-budget contract under concurrency: one decode program and
+    # at most one prefill program per (tail bucket, pow2 burst width).
+    # Raw totals may legitimately grow between bursts — burst 2 hits
+    # burst 1's cached prefix pages, shortening tails into a bucket the
+    # cold burst never used — so we assert the budget formula instead.
+    counts = sched.compile_counts()
+    widths = [w for w in (1, 2, 4, 8, 16) if w <= 4]
+    budget_ok = (
+        counts["decode"] == 1
+        and all(v <= len(widths) for v in counts["prefill"].values())
+        and counts["total"] <= 1 + len(widths) * len(sched.prefill_buckets)
+    )
+    return b1, b2, ok, budget_ok
+
+
 def _serve_bucketed(cfg, params, prompts, ntoks, max_len):
     from repro.serve import Engine, bucket_requests
 
@@ -280,6 +420,37 @@ def run_one(path: str, smoke: bool) -> None:
         print(json.dumps(rec))
         return
 
+    if path == "multitenant":
+        cfg, prompts, ntoks, prios, max_len = _multitenant_trace(smoke)
+        params = lm.init(jax.random.PRNGKey(0), cfg)
+        b1, b2, tokens_ok, budget_ok = _serve_multitenant(
+            cfg, params, prompts, ntoks, prios, max_len, smoke
+        )
+        rec = {
+            "path": "multitenant",
+            "n_requests": len(prompts),
+            "classes": sorted(set(prios)),
+            "tokens_match_reference": bool(tokens_ok),
+            "compiles_within_budget": bool(budget_ok),
+        }
+        for tag, b in (("burst1", b1), ("burst2", b2)):
+            served = sum(len(t) for t in b["toks"].values())
+            rec[tag] = {
+                "wall_s": round(b["wall"], 3),
+                "served_tokens": served,
+                "tokens_per_s": round(served / max(b["wall"], 1e-9), 2),
+                "shed_requests": len(b["shed"]),
+                "preemptions": b["preemptions"],
+                "prefill_chunks": b["prefill_chunks"],
+                "compiled_programs": b["compiled_programs"],
+                "latency_by_class": {
+                    f"priority_{p}": _percentiles(lat)
+                    for p, lat in sorted(b["lat_by_class"].items())
+                },
+            }
+        print(json.dumps(rec))
+        return
+
     if path == "prefix":
         cfg, prompts, ntoks, max_len, prefix_len = _prefix_trace(smoke)
         params = lm.init(jax.random.PRNGKey(0), cfg)
@@ -338,7 +509,8 @@ def main() -> int:
                     help="CI-sized trace (16 requests, short generations)")
     ap.add_argument("--out-root", default=str(REPO_ROOT))
     ap.add_argument("--run-one",
-                    choices=["continuous", "bucketed", "prefix", "session"],
+                    choices=["continuous", "bucketed", "prefix", "session",
+                             "multitenant"],
                     help=argparse.SUPPRESS)  # child-process mode
     args = ap.parse_args()
 
@@ -353,6 +525,7 @@ def main() -> int:
     buck = _spawn("bucketed", args.smoke)
     pref = _spawn("prefix", args.smoke)
     sess = _spawn("session", args.smoke)
+    mt = _spawn("multitenant", args.smoke)
     _, prompts, _ = _trace(args.smoke)
 
     rec = {
@@ -365,6 +538,7 @@ def main() -> int:
         "bucketed": buck,
         "prefix_trace": pref,
         "warm_session": sess,
+        "multitenant": mt,
         "warm_speedup": round(
             cont["warm_tokens_per_s"] / max(buck["warm_tokens_per_s"], 1e-9), 2
         ),
@@ -403,6 +577,19 @@ def main() -> int:
         f"compiles_unchanged={sess['compiles_unchanged']} "
         f"tokens_identical={sess['tokens_identical']}"
     )
+    p99s = " ".join(
+        f"{k}={v['p99_s']}s"
+        for k, v in mt["burst2"]["latency_by_class"].items()
+    )
+    print(
+        f"multitenant: {mt['burst2']['tokens_per_s']} tok/s "
+        f"shed={mt['burst1']['shed_requests']}+"
+        f"{mt['burst2']['shed_requests']} "
+        f"preemptions={mt['burst2']['preemptions']} "
+        f"chunks={mt['burst2']['prefill_chunks']} p99 {p99s} "
+        f"tokens_match_reference={mt['tokens_match_reference']} "
+        f"compiles_within_budget={mt['compiles_within_budget']}"
+    )
     if not rec["tokens_identical"]:
         print("ERROR: continuous and bucketed paths served different tokens")
         return 1
@@ -417,6 +604,14 @@ def main() -> int:
         return 1
     if not sess["compiles_unchanged"]:
         print("ERROR: the warm-session trace compiled new programs")
+        return 1
+    if not mt["tokens_match_reference"]:
+        print("ERROR: an admitted multitenant request lost tokens vs the "
+              "uncontended reference serve")
+        return 1
+    if not mt["compiles_within_budget"]:
+        print("ERROR: multitenant bursts compiled beyond the "
+              "1 decode + one prefill per (bucket, width) budget")
         return 1
     if rec["warm_speedup"] <= 1.0:
         print("WARNING: continuous batching did not beat the bucketed path")

@@ -15,6 +15,11 @@ python -m pytest -x -q -m "not slow" "$@"
 if [ "$#" -gt 0 ]; then
   python -m pytest -x -q -m "not slow" tests/test_serve_session.py
 fi
+# The threaded multi-tenant suite re-runs under a faulthandler timeout:
+# a deadlocked pump/producer dumps every thread's stack and fails,
+# instead of hanging CI until the job-level kill.
+python -m pytest -x -q -m "not slow" --faulthandler-timeout=600 \
+  tests/test_serve_concurrent.py
 # Static toolchain (ruff/mypy) when installed — CI always installs the
 # [lint] extra, so local runs without it only skip the style layer.
 if command -v ruff >/dev/null 2>&1; then

@@ -499,7 +499,18 @@ def prefill_paged(params, batch, cfg: LMConfig, pool, block_tables, slots,
     scatters at ``slots``.  ``use_context=False`` (static, for
     schedulers whose prefix reuse is gated off — ctx_len is then always
     0) skips the per-layer context gather entirely.  Returns
-    (pool, (B, 1, V) logits at each row's last real token)."""
+    (pool, (B, 1, V) logits at each row's last real token).
+
+    This is also the scheduler's **chunked-prefill** entry: a
+    continuation chunk passes the already-filled token count as
+    ``ctx_len`` and the next chunk as the tail.  Nothing here needs the
+    chunk boundary to be page-aligned — positions are absolute via
+    ``offset=ctx_len``, the context gather reads whole pages but masks
+    attention at ``j < ctx_len[b]``, and ``page_write_indices`` scatters
+    a tail starting mid-page.  Each chunk therefore computes bitwise
+    what a single full prefill would at those positions (the exactness
+    gate in serve.Scheduler holds the cases where it could differ —
+    SSM state, lossy cache dtype — out of this path)."""
     tokens = batch["tokens"]
     B, T = tokens.shape
     x = embed_inputs(params, batch, cfg, offset=ctx_len[:, None])

@@ -3,6 +3,7 @@ from .engine import (  # noqa: F401
     GenerationResult,
     bucket_requests,
     check_capacity,
+    check_queue_capacity,
     check_unique_rids,
     derive_request_keys,
     sample_tokens,

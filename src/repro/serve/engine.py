@@ -67,6 +67,23 @@ def check_unique_rids(request_ids) -> None:
         raise ValueError(f"duplicate request ids {dup}")
 
 
+def check_queue_capacity(queued: int, incoming: int, max_queue) -> None:
+    """Overload-shedding sibling of :func:`check_capacity`: a bounded
+    submission queue rejects arrivals it cannot absorb instead of
+    growing without limit under sustained overload.  ``max_queue=None``
+    means unbounded (the default).  A real ``ValueError`` — the same
+    shed-and-retry contract as the capacity checks — raised BEFORE any
+    state changes, so a shed submission leaves the session untouched."""
+    if max_queue is None:
+        return
+    if queued + incoming > max_queue:
+        raise ValueError(
+            f"queue overloaded: {queued} queued + {incoming} incoming > "
+            f"max_queue {max_queue}; retry after the backlog drains or "
+            f"build the Scheduler with a larger max_queue"
+        )
+
+
 @partial(jax.jit, static_argnums=(0,))
 def _base_key(seed: int):
     # seed is a *static* arg: the key is baked into the compiled constant,

@@ -191,6 +191,26 @@ class PagePool:
         """Pages allocatable right now: free + evictable cached."""
         return len(self._free) + len(self._lru)
 
+    def check_conservation(self) -> None:
+        """Page-conservation invariant: every usable page is exactly one
+        of FREE, CACHED (zero-ref, indexed, evictable) or LIVE — i.e.
+        ``available() + live_pages == usable_pages`` — and no cached
+        page carries a reference.  Raises ``RuntimeError`` on violation.
+        Cheap enough for tests to call after every operation; the
+        scheduler's preemption path (release + later re-allocate of the
+        same prefix) must preserve it at every step."""
+        free, cached, live = len(self._free), len(self._lru), self.live_pages
+        if free + cached + live != self.usable_pages:
+            raise RuntimeError(
+                f"page accounting violated: {free} free + {cached} cached "
+                f"+ {live} live != {self.usable_pages} usable"
+            )
+        for page in self._lru:
+            if self._ref[page] != 0:
+                raise RuntimeError(
+                    f"cached page {page} holds refcount {int(self._ref[page])}"
+                )
+
     def match_prefix(self, prompt: np.ndarray) -> Tuple[List[int], List[str]]:
         """Longest resident prefix run for ``prompt``.
 
@@ -343,7 +363,10 @@ class PagePool:
     def release(self, pages: List[int]) -> None:
         """Drop one reference per page.  Zero-ref indexed pages become
         CACHED (evictable, still hittable); zero-ref private pages go
-        straight back to the free list."""
+        straight back to the free list.  CACHED-not-freed is what makes
+        scheduler preemption cheap: an evicted request's registered
+        prefix pages stay hittable, so its resume re-prefills only the
+        unregistered tail unless allocation pressure evicted them."""
         for page in pages:
             if self._ref[page] < 1:
                 raise ValueError(f"page {page} is not live")
