@@ -7,20 +7,21 @@ size, plus the composed FP-DCIM matmul accuracy figure); CI regenerates
 it with ``--smoke`` on every PR::
 
   PYTHONPATH=src python -m benchmarks.bench_kernels --smoke
+
+The sweep runs in a SUBPROCESS child (``common.run_child``) so the
+timings are cold and, critically, so a crashing sweep fails the parent
+instead of leaving last run's ``BENCH_kernels.json`` in place looking
+current; ``--in-process`` keeps the old single-process path for
+debugging under a debugger/profiler.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import pathlib
 import platform
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.kernels import ops, ref
-
-from .common import emit, time_fn
+from .common import emit, run_child, time_fn
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -36,6 +37,12 @@ _PREFIX = (((8, 64, 8, 4, 128, 512),), ((4, 16, 2, 4, 64, 128),))
 
 
 def run(smoke: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops, ref
+
     rng = np.random.default_rng(0)
     kernels: dict = {}
 
@@ -162,9 +169,23 @@ def main() -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (smallest problem sizes only)")
     ap.add_argument("--out", default=str(REPO_ROOT / "BENCH_kernels.json"))
+    ap.add_argument("--in-process", action="store_true",
+                    help="run the sweep in this process (debugging)")
+    ap.add_argument("--run-one", choices=["sweep"],
+                    help=argparse.SUPPRESS)  # child-process mode
     args = ap.parse_args()
 
-    rec = run(args.smoke)
+    if args.run_one:        # child: sweep, JSON record on the last line
+        print(json.dumps(run(args.smoke)))
+        return 0
+
+    if args.in_process:
+        rec = run(args.smoke)
+    else:
+        argv = ["-m", "benchmarks.bench_kernels", "--run-one", "sweep"]
+        if args.smoke:
+            argv.append("--smoke")
+        rec = run_child(argv, label="bench_kernels[sweep]", echo=True)
 
     from repro.core.results import dump_json
 

@@ -37,6 +37,15 @@ priority class and the shed count, and FAILS (nonzero exit) if any
 admitted request loses tokens versus an uncontended reference serve of
 the same trace, or if the second burst compiles new programs.
 
+A sixth child, ``sharded``, runs on a FORCED-8-DEVICE host platform
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8`` set by the
+parent before the child's jax import) and serves the standard trace at
+tp=1 and tp=8 through ``Scheduler(tp=...)``.  Tokens must be
+bitwise-identical across widths and the compiled-program count must not
+grow — the child exits nonzero otherwise.  It reports tokens/s and
+tokens/s-per-device; on a host CPU where all forced devices share the
+same cores, per-device is the honest throughput figure.
+
 Reports useful tokens/s (only the tokens each request asked for count)
 and p50/p99 request completion latency, cold (first trace, compiles
 included) and warm (second trace).  Paths must produce IDENTICAL greedy
@@ -56,15 +65,14 @@ from __future__ import annotations
 import argparse
 import hashlib
 import json
-import os
 import pathlib
 import platform
-import subprocess
-import sys
 import threading
 import time
 
 import numpy as np
+
+from .common import run_child
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -349,6 +357,66 @@ def _serve_multitenant(cfg, params, prompts, ntoks, prios, max_len,
     return b1, b2, ok, budget_ok
 
 
+def _serve_sharded(smoke: bool):
+    """Tensor-parallel serving on the forced-8-device host: the standard
+    mixed trace at tp=1 vs tp=8 through ``Scheduler(tp=...)``.  Greedy
+    tokens must be bitwise-identical across widths (the exactness
+    invariant the ``repro.dist`` serving rules guarantee) and the record
+    carries tokens/s AND tokens/s-per-device — on a host CPU the per-
+    device figure is the honest one, since 8 forced devices share the
+    same cores."""
+    import dataclasses
+
+    import jax
+
+    from repro import configs  # noqa: F401  (via _trace)
+    from repro.models import lm
+    from repro.serve import Request, Scheduler
+
+    n_dev = jax.device_count()
+    if n_dev != 8:
+        raise SystemExit(f"sharded child expected 8 forced devices, "
+                         f"got {n_dev}")
+    cfg, prompts, ntoks = _trace(smoke)
+    cfg = dataclasses.replace(cfg, cache_dtype="float32")
+    max_len = 64 if smoke else 128
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    useful = sum(ntoks)
+    rec = {"path": "sharded", "devices": n_dev, "n_requests": len(prompts),
+           "useful_tokens": useful}
+    keys = {}
+    for tp in (1, n_dev):
+        sched = Scheduler(cfg, params, max_slots=4, max_len=max_len,
+                          page_size=8, tp=tp)
+        reqs = [Request(prompt=p, n_tokens=n)
+                for p, n in zip(prompts, ntoks)]
+
+        def run():
+            t0 = time.perf_counter()
+            results = sched.serve(reqs)
+            wall = time.perf_counter() - t0
+            toks = {r.rid: r.generated for r in results}
+            return wall, toks, [r.finished_wall_s for r in results]
+
+        cold, warm = run(), run()
+        keys[tp] = _digest(cold[1])
+        sub = _path_record(f"tp{tp}", useful, cold, warm, {
+            "compiled_programs": sched.compile_counts()["total"],
+            "decode_programs": sched.compile_counts()["decode"],
+        })
+        sub["warm_tokens_per_s_per_device"] = round(
+            sub["warm_tokens_per_s"] / tp, 2
+        )
+        rec[f"tp{tp}"] = sub
+    rec["tokens_identical"] = len(set(keys.values())) == 1
+    rec["compiles_identical"] = (
+        rec["tp1"]["compiled_programs"] == rec[f"tp{n_dev}"]["compiled_programs"]
+    )
+    print(json.dumps(rec))
+    if not rec["tokens_identical"] or not rec["compiles_identical"]:
+        raise SystemExit(1)     # exactness guard: fail the parent loudly
+
+
 def _serve_bucketed(cfg, params, prompts, ntoks, max_len):
     from repro.serve import Engine, bucket_requests
 
@@ -390,6 +458,10 @@ def run_one(path: str, smoke: bool) -> None:
     import jax
 
     from repro.models import lm
+
+    if path == "sharded":
+        _serve_sharded(smoke)
+        return
 
     if path == "session":
         cfg, prompts, ntoks, max_len, prefix_len = _prefix_trace(smoke)
@@ -487,20 +559,19 @@ def run_one(path: str, smoke: bool) -> None:
     print(json.dumps(_path_record(path, sum(ntoks), cold, warm, extra)))
 
 
-def _spawn(path: str, smoke: bool) -> dict:
-    env = dict(os.environ)
-    src = str(REPO_ROOT / "src")
-    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-    cmd = [sys.executable, "-m", "benchmarks.bench_serve", "--run-one", path]
+def _spawn(path: str, smoke: bool, n_devices: int = 0) -> dict:
+    argv = ["-m", "benchmarks.bench_serve", "--run-one", path]
     if smoke:
-        cmd.append("--smoke")
-    out = subprocess.run(
-        cmd, capture_output=True, text=True, env=env, cwd=REPO_ROOT,
-        timeout=1800,
-    )
-    if out.returncode != 0:
-        raise RuntimeError(f"{path} run failed:\n{out.stderr[-2000:]}")
-    return json.loads(out.stdout.splitlines()[-1])
+        argv.append("--smoke")
+    env_extra = None
+    if n_devices:
+        # Forced host devices must be set BEFORE the child imports jax.
+        env_extra = {
+            "XLA_FLAGS":
+                f"--xla_force_host_platform_device_count={n_devices}"
+        }
+    return run_child(argv, env_extra=env_extra,
+                     label=f"bench_serve[{path}]")
 
 
 def main() -> int:
@@ -510,7 +581,7 @@ def main() -> int:
     ap.add_argument("--out-root", default=str(REPO_ROOT))
     ap.add_argument("--run-one",
                     choices=["continuous", "bucketed", "prefix", "session",
-                             "multitenant"],
+                             "multitenant", "sharded"],
                     help=argparse.SUPPRESS)  # child-process mode
     args = ap.parse_args()
 
@@ -526,6 +597,7 @@ def main() -> int:
     pref = _spawn("prefix", args.smoke)
     sess = _spawn("session", args.smoke)
     mt = _spawn("multitenant", args.smoke)
+    shard = _spawn("sharded", args.smoke, n_devices=8)
     _, prompts, _ = _trace(args.smoke)
 
     rec = {
@@ -539,6 +611,7 @@ def main() -> int:
         "prefix_trace": pref,
         "warm_session": sess,
         "multitenant": mt,
+        "sharded": shard,
         "warm_speedup": round(
             cont["warm_tokens_per_s"] / max(buck["warm_tokens_per_s"], 1e-9), 2
         ),
@@ -589,6 +662,13 @@ def main() -> int:
         f"chunks={mt['burst2']['prefill_chunks']} p99 {p99s} "
         f"tokens_match_reference={mt['tokens_match_reference']} "
         f"compiles_within_budget={mt['compiles_within_budget']}"
+    )
+    print(
+        f"sharded: tp8={shard['tp8']['warm_tokens_per_s']} tok/s "
+        f"({shard['tp8']['warm_tokens_per_s_per_device']}/dev) vs "
+        f"tp1={shard['tp1']['warm_tokens_per_s']} tok/s "
+        f"programs={shard['tp8']['compiled_programs']} "
+        f"tokens_identical={shard['tokens_identical']}"
     )
     if not rec["tokens_identical"]:
         print("ERROR: continuous and bucketed paths served different tokens")

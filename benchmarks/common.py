@@ -1,10 +1,71 @@
-"""Benchmark helpers: timing + CSV emission (name,us_per_call,derived)."""
+"""Benchmark helpers: timing, CSV emission (name,us_per_call,derived),
+and the subprocess-child harness every benchmark driver runs its
+measured sections through (cold-start isolation + hard failure
+propagation)."""
 from __future__ import annotations
 
+import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
-from typing import Callable
+from typing import Callable, Optional, Sequence
 
 import jax
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_child(argv: Sequence[str], *, timeout: int = 1800,
+              env_extra: Optional[dict] = None, label: str = "child",
+              echo: bool = False) -> dict:
+    """Run ``python <argv...>`` as a benchmark child and return the JSON
+    record on its LAST stdout line.
+
+    This is the one place child results enter a benchmark record, and it
+    fails loudly on both hazards that used to produce silently-stale
+    JSON sections: a nonzero child exit (crash after partial output) and
+    a last stdout line that is not a JSON object (crash message swallowed
+    by ``splitlines()[-1]``).  Either raises ``RuntimeError`` carrying
+    the child's stderr tail, so ``--smoke`` CI runs abort instead of
+    re-publishing the previous record.
+
+    ``echo=True`` forwards the child's progress lines (everything except
+    the final JSON record) to this process's stdout.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO_ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    if env_extra:
+        env.update(env_extra)
+    out = subprocess.run(
+        [sys.executable, *argv], capture_output=True, text=True, env=env,
+        cwd=REPO_ROOT, timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"{label} failed (rc={out.returncode}):\n"
+            f"--- stdout tail ---\n{out.stdout[-1000:]}\n"
+            f"--- stderr tail ---\n{out.stderr[-2000:]}"
+        )
+    lines = out.stdout.splitlines()
+    last = lines[-1] if lines else ""
+    try:
+        rec = json.loads(last)
+    except ValueError:
+        rec = None
+    if not isinstance(rec, dict):
+        raise RuntimeError(
+            f"{label} produced no JSON record on its last stdout line "
+            f"(got {last[:200]!r}):\n"
+            f"--- stderr tail ---\n{out.stderr[-2000:]}"
+        )
+    if echo:
+        for line in lines[:-1]:
+            print(line)
+    return rec
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -2,13 +2,25 @@
 # Local equivalent of .github/workflows/ci.yml: the tier-1 test command,
 # the program-contract lint (results/lint.json), perf record
 # regeneration (BENCH_dse.json / BENCH_serve.json / BENCH_kernels.json —
-# bench_serve includes the warm-session trace), two single-cell dry-runs
-# through the results store (the 2x16x16 train cell asserts the SPMD
-# partitioner emits no involuntary-rematerialization warnings), and the
+# bench_serve includes the warm-session and sharded traces), three
+# single-cell dry-runs through the results store (the 2x16x16 train cell
+# asserts the SPMD partitioner emits no involuntary-rematerialization
+# warnings; the tp8 cell compiles the sharded serving decode), and the
 # docs-snippet check (every python block in README/docs must execute).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-python -m pytest -x -q -m "not slow" "$@"
+# Tier-1 / slow split: everything slow-marked (the 8-device subprocess
+# suites) is excluded here and runs in the dedicated CI `sharded` job.
+echo "tier-1: $(python -m pytest -q -m 'not slow' --collect-only 2>/dev/null | tail -1)"
+echo "slow:   $(python -m pytest -q -m 'slow' --collect-only 2>/dev/null | tail -1)"
+# Coverage floor on the serving + distribution layers when pytest-cov is
+# installed (CI installs the [cov] extra; plain local runs skip it).
+COV=()
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+  COV=(--cov=repro.serve --cov=repro.dist --cov-report=term
+       --cov-fail-under=75)
+fi
+python -m pytest -x -q -m "not slow" ${COV[@]+"${COV[@]}"} "$@"
 # The persistent-session / streaming module already ran inside the full
 # sweep above; when extra args filtered that sweep, run it explicitly so
 # no invocation can skip it.
@@ -39,5 +51,11 @@ PYTHONPATH=src python -m repro.launch.dryrun \
   --out results/dryrun-ci --force --fail-on-remat
 PYTHONPATH=src python -m repro.launch.dryrun \
   --arch qwen2.5-3b --shape train_4k --mesh multi \
+  --out results/dryrun-ci --force --fail-on-remat
+# The tensor-parallel sharded serving decode program (Scheduler(tp=8)'s
+# paged decode) on an 8-wide ("model",) mesh: must compile remat-free
+# with the pool donation aliased.
+PYTHONPATH=src python -m repro.launch.dryrun \
+  --arch qwen2.5-3b --shape decode_32k --tp 8 \
   --out results/dryrun-ci --force --fail-on-remat
 python scripts/check_docs.py

@@ -72,11 +72,20 @@ def default_rules(mesh: Mesh) -> Dict[str, Axes]:
 
 
 class MeshContext:
-    """Resolves logical axis names against one physical mesh."""
+    """Resolves logical axis names against one physical mesh.
 
-    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Axes]] = None):
+    ``exact=True`` marks a *serving* context: the program must stay
+    bitwise-identical to its unsharded run, so :func:`repl_act` gathers
+    activations back to replicated before every contraction over a
+    sharded dim (all communication is all-gather — pure data movement).
+    Training contexts leave it ``False`` and :func:`repl_act` is a no-op.
+    """
+
+    def __init__(self, mesh: Mesh, rules: Optional[Dict[str, Axes]] = None,
+                 exact: bool = False):
         self.mesh = mesh
         self.rules = dict(rules) if rules is not None else default_rules(mesh)
+        self.exact = bool(exact)
 
     # -- resolution -----------------------------------------------------------
     def _axis_size(self, axis: str) -> int:
@@ -134,7 +143,16 @@ class MeshContext:
         return P(*entries)
 
     def sharding(self, logical_dims: LogicalDims, shape: Sequence[int]) -> NamedSharding:
-        return NamedSharding(self.mesh, self.spec(logical_dims, shape))
+        # Canonicalise by dropping trailing replicated dims: jit emits
+        # output shardings in this canonical form, and NamedSharding
+        # equality is structural, so a device_put placement built with
+        # the full-rank spec would MISS the jit cache the first time a
+        # program sees a jit-produced array in that slot (one spurious
+        # recompile per program whose first call saw the fresh pool).
+        entries = tuple(self.spec(logical_dims, shape))
+        while entries and entries[-1] is None:
+            entries = entries[:-1]
+        return NamedSharding(self.mesh, P(*entries))
 
 
 # ------------------------------ active context --------------------------------
@@ -171,6 +189,27 @@ def shard_act(x, logical_dims: LogicalDims):
         return x
     return jax.lax.with_sharding_constraint(
         x, ctx.sharding(logical_dims, x.shape)
+    )
+
+
+def repl_act(x):
+    """Gather ``x`` back to fully replicated under an ``exact`` (serving)
+    context; identity otherwise.
+
+    Exact tensor parallelism never lets a *contracted* dim stay sharded:
+    a sharded contraction would finish with an all-reduce whose partial
+    sums associate differently than the single-device dot, breaking
+    bitwise identity.  Model code calls this immediately before every
+    contraction over a potentially-sharded dim (attention output
+    projection, FFN down projection, the MoE combine, the logits
+    consumed by sampling) so the only collective the partitioner can
+    emit there is an all-gather of the operand — exact data movement.
+    """
+    ctx = current()
+    if ctx is None or not ctx.exact:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P())
     )
 
 
@@ -250,3 +289,129 @@ def param_sharding_tree(shape_tree, mesh: Mesh, rules: Optional[Dict[str, Axes]]
         return ctx.sharding(logical, leaf.shape)
 
     return jax.tree_util.tree_map_with_path(one, shape_tree)
+
+
+# ------------------------------ exact serving rules ----------------------------
+# Logical names a *serving* mesh resolves — only non-contracting output
+# dims.  ``tp``/``d_inner``/``batch``/``seq_sp``/``fsdp`` are deliberately
+# absent: every existing shard_act annotation that names them resolves to
+# replicated under a serving context, which is exactly what bitwise
+# identity with the single-device program requires (see SERVE_PARAM_RULES).
+_SERVE_MODEL_LOGICAL = ("heads", "kv_heads", "ff", "experts", "vocab")
+
+
+def serve_rules(mesh: Mesh) -> Dict[str, Axes]:
+    """Logical->physical rules for an exact tensor/expert-parallel
+    serving mesh (axis name ``"model"``)."""
+    names = tuple(mesh.axis_names)
+    model = tuple(a for a in _MODEL_AXES if a in names)
+    return {logical: model for logical in _SERVE_MODEL_LOGICAL}
+
+
+def serving_context(mesh: Mesh) -> MeshContext:
+    """The exact-serving :class:`MeshContext` for ``mesh``."""
+    return MeshContext(mesh, rules=serve_rules(mesh), exact=True)
+
+
+# Serving parameter layout (ordered, first match wins; unmatched ->
+# replicate).  Only *output* dims shard, so every matmul contracts over a
+# replicated dim and each output element is the same full-length dot
+# product the single-device program computes — no partial-sum
+# all-reduces anywhere, hence bitwise-exact decode.  Deliberately
+# replicated (their outputs feed a contraction the activation side
+# re-gathers anyway, or sharding them would break exactness):
+#   * ``wo`` / dense ``w_down`` / MoE bank ``w_down`` output d_model;
+#   * ``embed`` (token gather + tied-unembedding families);
+#   * MLA factors: the absorbed attend contracts kv_lora_rank, so MLA
+#     attention stays replicated — MLA+MoE families (deepseek) get their
+#     parallelism from the expert banks;
+#   * all mamba parameters (x_proj/out_proj contract d_inner).
+SERVE_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"(?:^|/)wq/w$", (None, "heads")),
+    (r"(?:^|/)(?:wk|wv)/w$", (None, "kv_heads")),
+    (r"(?:^|/)(?:w_up|w_gate)/w$", (None, "ff")),
+    (r"(?:^|/)(?:w_gate|w_up)$", ("experts", None, "ff")),
+    (r"(?:^|/)w_down$", ("experts", None, None)),
+    (r"(?:^|/)head/w$", (None, "vocab")),
+)
+_SERVE_PARAM_RULES = tuple(
+    (re.compile(pat), base) for pat, base in SERVE_PARAM_RULES
+)
+
+
+def serve_logical_for_path(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Serving logical axes for a parameter path (rank + 1 leaves are
+    scan-stacked over layer groups, as in :func:`logical_for_path`)."""
+    for pat, base in _SERVE_PARAM_RULES:
+        if pat.search(path):
+            if ndim == len(base):
+                return tuple(base)
+            if ndim == len(base) + 1:
+                return (None,) + tuple(base)
+            break
+    return (None,) * ndim
+
+
+def serve_param_sharding_tree(shape_tree, mesh: Mesh):
+    """``NamedSharding`` per parameter for exact serving on ``mesh``."""
+    ctx = serving_context(mesh)
+
+    def one(path, leaf):
+        logical = serve_logical_for_path(_path_str(path), len(leaf.shape))
+        return ctx.sharding(logical, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, shape_tree)
+
+
+# Paged-pool leaves by key.  GQA K/V pages are (groups, n_pages, page,
+# n_kv, hd) — sharded over kv heads, the one big serving buffer that
+# scales down per-device.  MLA latent pages contract kv_lora_rank in the
+# absorbed attend and SSM states feed elementwise recurrences whose
+# surrounding projections contract d_inner: both replicate.
+_SERVE_POOL_LOGICAL: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": (None, None, None, "kv_heads", None),
+    "v": (None, None, None, "kv_heads", None),
+}
+
+
+def _pool_logical(path, ndim: int) -> Tuple[Optional[str], ...]:
+    key = ""
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            key = str(p.key)
+            break
+    logical = _SERVE_POOL_LOGICAL.get(key, (None,) * ndim)
+    if len(logical) != ndim:
+        logical = (None,) * ndim
+    return logical
+
+
+def serve_pool_sharding_tree(shape_tree, mesh: Mesh):
+    """``NamedSharding`` per paged-pool leaf for exact serving."""
+    ctx = serving_context(mesh)
+
+    def one(path, leaf):
+        return ctx.sharding(_pool_logical(path, len(leaf.shape)), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, shape_tree)
+
+
+def constrain_pool(pool):
+    """Pin a cache pool RETURNED by a jitted serve program to the same
+    layout :func:`serve_pool_sharding_tree` committed its input to.
+
+    Without this the partitioner is free to hand the (donated) pool back
+    in whatever layout it liked best internally; the session rebinds the
+    result as the next call's input, whose sharding then differs from
+    the traced one — a recompile per step, and a different layout again
+    the step after.  No-op outside an exact serving context."""
+    ctx = current()
+    if ctx is None or not ctx.exact:
+        return pool
+
+    def one(path, leaf):
+        return jax.lax.with_sharding_constraint(
+            leaf, ctx.sharding(_pool_logical(path, leaf.ndim), leaf.shape)
+        )
+
+    return jax.tree_util.tree_map_with_path(one, pool)

@@ -10,10 +10,16 @@ train/prefill/decode step against abstract inputs on the production mesh
 cost_analysis() / the post-SPMD collective schedule, and persist a JSON
 record per cell for the roofline layer.
 
+``--tp N`` switches decode cells to the tensor-parallel sharded SERVING
+program (the paged decode ``serve.Scheduler(tp=N)`` runs) on a 1-D
+N-wide ``("model",)`` mesh — cells keyed ``{arch}__{shape}__tpN``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
       --shape train_4k --mesh both --out results/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape decode_32k --tp 8 --out results/dryrun
 """
 # (no __future__ import: the XLA_FLAGS lines must be the first statements)
 import argparse
@@ -186,6 +192,46 @@ def build_decode_cell(cfg: LMConfig, shape, mesh):
     return fn, (params_shapes, inputs_shapes, pos_shape, cache_shapes)
 
 
+def build_decode_tp_cell(cfg: LMConfig, shape, mesh, page_size: int = 16):
+    """The tensor-parallel PAGED serving decode program — the program
+    ``serve.Scheduler(tp=N)`` actually runs — on a 1-D ``("model",)``
+    mesh: params laid out by the output-dim-only serving rules, K/V
+    pages head-sharded, block tables / positions / inputs replicated
+    (they are host-driven state), and the returned pool pinned back to
+    its input layout so donation aliases without a relayout.
+
+    Must be traced under ``shd.serving_context(mesh)`` (run_cell does
+    this) so the in-model ``repl_act`` gathers are live — they are what
+    keeps every contraction full-length and the tokens bitwise equal to
+    single-device serving."""
+    B, S = shape.global_batch, shape.seq_len
+    n_pages = 1 + B * (S // page_size)
+    params_shapes = jax.eval_shape(partial(lm.init, cfg=cfg), jax.random.PRNGKey(0))
+    pool_shapes = jax.eval_shape(
+        partial(lm.init_paged_pool, cfg, B, n_pages, page_size)
+    )
+    inputs_shapes = specs_mod.batch_struct(cfg, "decode", B, S)
+    p_sh = shd.serve_param_sharding_tree(params_shapes, mesh)
+    pool_sh = shd.serve_pool_sharding_tree(pool_shapes, mesh)
+    repl = NamedSharding(mesh, P())
+    i_sh = jax.tree.map(lambda _: repl, inputs_shapes)
+
+    def serve_step(params, inputs, pos, pool, block_tables):
+        return lm.decode_step_paged(params, inputs, pos, pool,
+                                    block_tables, cfg)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_sh, i_sh, repl, pool_sh, repl),
+        out_shardings=(repl, pool_sh),
+        donate_argnums=(3,),
+    )
+    pos_shape = jax.ShapeDtypeStruct((B,), jnp.int32)
+    bt_shape = jax.ShapeDtypeStruct((B, S // page_size), jnp.int32)
+    return fn, (params_shapes, inputs_shapes, pos_shape, pool_shapes,
+                bt_shape)
+
+
 # ----------------------------- analysis ----------------------------------------
 # Shape/dtype parsing and the collective taxonomy live in
 # repro.launch.hlo_analysis (shared with repro.analysis); this module
@@ -277,8 +323,9 @@ from repro.analysis.remat import capture_fd_stderr as _capture_fd_stderr
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: pathlib.Path, force: bool = False,
-             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+             overrides: Optional[Dict[str, Any]] = None,
+             tp: int = 0) -> Dict[str, Any]:
+    mesh_tag = f"tp{tp}" if tp else ("pod2x16x16" if multi_pod else "pod16x16")
     store = ResultStore(out_dir)
     name = f"{arch}__{shape_name}__{mesh_tag}"
     if name in store and not force:
@@ -295,17 +342,27 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["status"] = "skipped:full-attention-500k"
         store.put(name, rec, kind="dryrun")
         return rec
+    if tp and shape.kind != "decode":
+        rec["status"] = "skipped:tp-decode-only"
+        store.put(name, rec, kind="dryrun")
+        return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if tp:
+        mesh = jax.make_mesh((tp,), ("model",))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     cfg = entry.config(**(overrides or {}))
     if overrides:
         rec["overrides"] = dict(overrides)
     t_cell = time.time()
     try:
         captured: Dict[str, str] = {"text": ""}
-        with shd.use_mesh(mesh), _capture_fd_stderr(captured):
+        trace_ctx = shd.serving_context(mesh) if tp else mesh
+        with shd.use_mesh(trace_ctx), _capture_fd_stderr(captured):
             t0 = time.time()
-            if shape.kind == "train":
+            if tp:
+                fn, args = build_decode_tp_cell(cfg, shape, mesh)
+            elif shape.kind == "train":
                 fn, args = build_train_cell(cfg, shape, mesh)
             elif shape.kind == "prefill":
                 fn, args = build_prefill_cell(cfg, shape, mesh)
@@ -356,6 +413,12 @@ def main():
                          "(missing/contradictory sharding annotations)")
     ap.add_argument("--set", action="append", default=[],
                     help="config override key=value (e.g. ssm_impl=pallas)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="compile decode cells as tensor-parallel sharded "
+                         "serving programs (the Scheduler(tp=N) paged "
+                         "decode) on a 1-D N-wide ('model',) mesh instead "
+                         "of the production pod meshes; non-decode shapes "
+                         "are skipped")
     args = ap.parse_args()
 
     overrides = {}
@@ -374,7 +437,11 @@ def main():
     out_dir.mkdir(parents=True, exist_ok=True)
 
     archs = [args.arch] if args.arch else configs.ARCH_NAMES
-    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.tp:
+        meshes = [False]        # one tp-mesh pass; --mesh is pod-only
+    else:
+        meshes = {"single": [False], "multi": [True],
+                  "both": [False, True]}[args.mesh]
 
     n_ok = n_fail = n_skip = n_remat = 0
     for arch in archs:
@@ -382,7 +449,8 @@ def main():
         for shape_name in shapes:
             for mp in meshes:
                 rec = run_cell(arch, shape_name, mp, out_dir,
-                               force=args.force, overrides=overrides)
+                               force=args.force, overrides=overrides,
+                               tp=args.tp)
                 s = rec["status"]
                 n_ok += s == "ok"
                 n_fail += s == "error"

@@ -11,7 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import shard_act
+from repro.dist.sharding import repl_act, shard_act
 
 
 def dense_init(key, d_in: int, d_out: int, dtype, bias: bool = False, scale=None):
@@ -180,7 +180,8 @@ def ffn_apply(p, x, act: str):
     else:  # pragma: no cover
         raise ValueError(act)
     h = shard_act(h, ("batch", None, "ff"))
-    return dense(p["w_down"], h)
+    # Exact serving gathers the ff dim before the w_down contraction.
+    return dense(p["w_down"], repl_act(h))
 
 
 def softmax_xent_chunked(

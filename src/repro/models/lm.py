@@ -23,7 +23,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import shard_act
+from repro.dist.sharding import repl_act, shard_act
 from . import attention as attn
 from . import common, mamba as ssm, moe as moe_mod
 from .common import (
@@ -227,8 +227,13 @@ def embed_inputs(params, batch: Dict[str, Any], cfg: LMConfig, offset=0):
 
 def _head_logits(params, h, cfg: LMConfig):
     if cfg.tie_embeddings:
-        return h @ params["embed"]["w"].astype(h.dtype).T
-    return dense(params["head"], h)
+        logits = h @ params["embed"]["w"].astype(h.dtype).T
+    else:
+        logits = dense(params["head"], h)
+    # Exact serving gathers vocab-sharded logits so argmax/categorical
+    # sampling runs fully replicated (identical reduction order and RNG
+    # bits on every device); no-op outside an exact mesh context.
+    return repl_act(logits)
 
 
 # ------------------------------- forward --------------------------------------
@@ -408,7 +413,8 @@ def prefill(params, batch, cfg: LMConfig, max_len: Optional[int] = None,
 
 
 # --------------------------- paged KV-cache pool -------------------------------
-def init_paged_pool(cfg: LMConfig, n_slots: int, n_pages: int, page_size: int):
+def init_paged_pool(cfg: LMConfig, n_slots: int, n_pages: int, page_size: int,
+                    mesh=None):
     """Paged cache pool: attention caches are SHARED pages instead of
     per-slot monolithic regions.
 
@@ -422,7 +428,13 @@ def init_paged_pool(cfg: LMConfig, n_slots: int, n_pages: int, page_size: int):
 
     SSM state is O(1) in sequence length, so it stays per-slot:
     (groups, n_slots + 1, ...), where row ``n_slots`` is the garbage
-    SLOT that absorbs the state writes of burst-padding rows."""
+    SLOT that absorbs the state writes of burst-padding rows.
+
+    With ``mesh`` (a tensor-parallel serving mesh, axis ``"model"``) the
+    K/V page leaves are laid out head-sharded via
+    ``dist.sharding.serve_pool_sharding_tree`` — the one serving buffer
+    whose per-device footprint shrinks with tp — while MLA latent pages
+    and SSM states replicate (their contractions must stay exact)."""
     period = cfg.scan_period()
     groups = cfg.n_layers // period
     cdt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.cache_dtype]
@@ -444,7 +456,12 @@ def init_paged_pool(cfg: LMConfig, n_slots: int, n_pages: int, page_size: int):
             lambda a: jnp.zeros((groups,) + a.shape, a.dtype), c
         )
 
-    return tuple(one(cfg.mixer_kind(pos)) for pos in range(period))
+    pool = tuple(one(cfg.mixer_kind(pos)) for pos in range(period))
+    if mesh is not None:
+        from repro.dist.sharding import serve_pool_sharding_tree
+
+        pool = jax.device_put(pool, serve_pool_sharding_tree(pool, mesh))
+    return pool
 
 
 def decode_step_paged(params, inputs, pos, pool, block_tables, cfg: LMConfig):

@@ -15,7 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.dist.sharding import shard_act
+from repro.dist.sharding import repl_act, shard_act
 from .common import dense, dense_init, ffn_apply, ffn_init
 
 
@@ -133,6 +133,11 @@ def moe_apply(p, x, cfg, training: bool = True):
         h = h * jnp.einsum("gtd,edf->egtf", xg, w_up.astype(xg.dtype))
         h = shard_act(h, ("experts", "batch", None, "ff"))
         ye = jnp.einsum("egtf,efd->egtd", h, w_down.astype(xg.dtype))
+        # Exact serving gathers the expert dim before the combine: the
+        # weighted sum over experts must associate exactly as it does on
+        # one device (top_k >= 3 sums are order-sensitive, and sharded
+        # zeros for unrouted experts flip -0.0 signs).
+        ye = repl_act(ye)
         y = jnp.einsum("gte,egtd->gtd", gates.astype(ye.dtype), ye)
         y = y.reshape(B, S, D)
         if m.n_shared:
@@ -163,6 +168,7 @@ def moe_apply(p, x, cfg, training: bool = True):
     h = h * jnp.einsum("egcd,edf->egcf", xe, w_up.astype(xe.dtype))
     ye = jnp.einsum("egcf,efd->egcd", h, w_down.astype(xe.dtype))
     ye = shard_act(ye, ("experts", "batch", None, None))
+    ye = repl_act(ye)
     y = jnp.einsum("gtec,egcd->gtd", combine.astype(ye.dtype), ye)
 
     y = y.reshape(B, S, D)

@@ -113,6 +113,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.analysis.registry import Built, Replay, register_contract
+from repro.dist import sharding as shd
 from repro.models import lm
 from repro.models.config import LMConfig
 
@@ -246,7 +247,7 @@ def _prefill_fn(params, pool, tokens, valid_len, slot, key, temp, *,
     tok0 = sample_tokens(
         logits[:, -1], key[None], jnp.zeros((1,), jnp.int32), temp
     )[0]
-    return pool, tok0
+    return shd.constrain_pool(pool), tok0
 
 
 def _decode_fn(params, pool, cur, pos, active, keys, steps, temps, *,
@@ -261,7 +262,9 @@ def _decode_fn(params, pool, cur, pos, active, keys, steps, temps, *,
         params, {"tokens": cur[:, None]}, pos_eff, pool, cfg
     )
     nxt = sample_tokens(logits[:, -1], keys, steps, temps)
-    return pool, jnp.where(active, nxt, -1)
+    # Pin the returned (donated) pool's layout to the committed input
+    # layout, so sharded serving never recompiles on pool rebinding.
+    return shd.constrain_pool(pool), jnp.where(active, nxt, -1)
 
 
 def _decode_paged_fn(params, pool, cur, pos, active, block_tables, keys,
@@ -276,7 +279,7 @@ def _decode_paged_fn(params, pool, cur, pos, active, block_tables, keys,
         params, {"tokens": cur[:, None]}, pos_eff, pool, block_tables, cfg
     )
     nxt = sample_tokens(logits[:, -1], keys, steps, temps)
-    return pool, jnp.where(active, nxt, -1)
+    return shd.constrain_pool(pool), jnp.where(active, nxt, -1)
 
 
 def _burst_prefill_fn(params, pool, tokens, block_tables, slots, ctx_len,
@@ -298,7 +301,7 @@ def _burst_prefill_fn(params, pool, tokens, block_tables, slots, ctx_len,
     toks = sample_tokens(
         logits[:, -1], keys, jnp.zeros((tokens.shape[0],), jnp.int32), temps
     )
-    return pool, toks
+    return shd.constrain_pool(pool), toks
 
 
 class StreamHandle:
@@ -445,7 +448,8 @@ class ServeSession:
         S = sched.max_slots
         if sched.paged:
             self.pool = lm.init_paged_pool(
-                sched.cfg, S, sched.n_pages, sched.page_size
+                sched.cfg, S, sched.n_pages, sched.page_size,
+                mesh=sched.mesh,
             )
             self.ppool: Optional[PagePool] = PagePool(
                 sched.n_pages, sched.page_size
@@ -1475,12 +1479,39 @@ class Scheduler:
         max_queue: Optional[int] = None,
         preempt: bool = True,
         prefill_chunk: Optional[int] = None,
+        mesh=None,
+        tp: Optional[int] = None,
     ):
         if attn_backend is not None:
             # Thread the paged-attention backend (kernels.ops.AttnBackend)
             # through every jitted program via the config — zero call-site
             # churn; None keeps cfg's own setting (default "auto").
             cfg = dataclasses.replace(cfg, attn_backend=attn_backend).validate()
+        # Tensor/expert-parallel serving mesh.  Like attn_backend this is
+        # pure plumbing with zero call-site churn: params and the paged
+        # pool are laid out by the exact serving rules
+        # (dist.sharding.serve_param_sharding_tree /
+        # serve_pool_sharding_tree) and every trace/call runs inside
+        # _numerics()'s use_mesh, so the SAME jitted programs partition
+        # over the mesh while greedy tokens stay bitwise-identical to the
+        # single-device run (all communication is all-gather).
+        if tp is not None:
+            if mesh is not None:
+                raise ValueError("pass either mesh= or tp=, not both")
+            tp = int(tp)
+            if tp < 1:
+                raise ValueError(f"tp must be >= 1, got {tp}")
+            if tp > jax.device_count():
+                raise ValueError(
+                    f"tp={tp} exceeds {jax.device_count()} visible device(s)"
+                )
+            mesh = jax.make_mesh((tp,), ("model",))
+        self.mesh = mesh
+        self.mesh_ctx = None if mesh is None else shd.serving_context(mesh)
+        if self.mesh is not None:
+            params = jax.device_put(
+                params, shd.serve_param_sharding_tree(params, self.mesh)
+            )
         self.cfg = cfg
         self.params = params
         self.max_slots = int(max_slots)
@@ -1567,7 +1598,17 @@ class Scheduler:
 
     # ----------------------------- plumbing ---------------------------------
     def _numerics(self):
-        return numerics_ctx(self.dcim_sim)
+        """The context every program trace/call runs under.  All jit
+        entry points funnel through ``ServeSession._step_locked`` (and
+        the contract replays), which wraps its whole body in this — so
+        installing the serving mesh here shards every program with zero
+        call-site churn."""
+        if self.mesh_ctx is None:
+            return numerics_ctx(self.dcim_sim)
+        stack = contextlib.ExitStack()
+        stack.enter_context(numerics_ctx(self.dcim_sim))
+        stack.enter_context(shd.use_mesh(self.mesh_ctx))
+        return stack
 
     def _bucket_for(self, prompt_len: int) -> int:
         for b in self.prefill_buckets:
@@ -1773,3 +1814,116 @@ def _build_serve_contract() -> Built:
         hot_jaxprs=[("decode", decode_jaxpr)],
         replay=replay,
     )
+
+
+@register_contract(
+    "serve.scheduler_tp",
+    checks=("donation", "recompile", "collectives"),
+    description="tensor-parallel paged serve loop on a tp=<n_devices> "
+                "('model',) mesh at a smoke config: the sharded pool "
+                "donation must still alias, a replayed trace must stay "
+                "within the single-device compile budget (sharding adds "
+                "no programs), and the partitioned decode HLO must move "
+                "data only — per-device all-gather bytes under budget, "
+                "all-to-all forbidden for this non-MoE family (exact "
+                "serving has no partial-sum collectives to reshuffle)",
+)
+def _build_serve_tp_contract() -> Built:
+    from repro.analysis.jaxpr_tools import canonical_signature, compile_unit
+    from repro.analysis.registry import ContractSkip
+    from repro import configs
+
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        raise ContractSkip(
+            "tp serve contract needs >= 2 devices; run via "
+            "`python -m repro.analysis.lint` (forces 8 host devices)"
+        )
+
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    sched = Scheduler(cfg, params, max_slots=3, max_len=32, page_size=8,
+                      max_queue=64, prefill_chunk=8, tp=n_dev)
+    session = sched.session()
+
+    signatures: List[Tuple[str, str]] = []
+    orig_decode, orig_prefill_jit = sched._decode, sched._prefill_jit
+
+    def spy_decode(*args):
+        signatures.append(("decode", canonical_signature(args)))
+        return orig_decode(*args)
+
+    def spy_prefill_jit(key):
+        fn = orig_prefill_jit(key)
+
+        def wrapped(*args):
+            signatures.append(("prefill", canonical_signature(args)))
+            return fn(*args)
+
+        return wrapped
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(1, 64, p).astype(np.int32),
+                n_tokens=t, rid=i, arrival=a, priority=pr)
+        for i, (p, t, a, pr) in enumerate(
+            [(3, 2, 0, 1), (9, 3, 0, 2), (17, 2, 1, 1), (6, 3, 1, 2)]
+        )
+    ]
+    sched._decode, sched._prefill_jit = spy_decode, spy_prefill_jit
+    try:
+        session.serve(reqs)
+    finally:
+        sched._decode, sched._prefill_jit = orig_decode, orig_prefill_jit
+
+    counts = sched.compile_counts()
+    replay = Replay(
+        signatures=signatures,
+        max_programs={"decode": 1, "prefill": len(sched._prefills)},
+        live_counts={
+            "decode": counts["decode"],
+            "prefill": sum(counts["prefill"].values()),
+        },
+        live_budget={"decode": 1, "prefill": len(sched._prefills)},
+    )
+
+    # Per-device all-gather budget: the biggest replicated-gather in one
+    # decode step is the logits gather, vocab * n_slots * 4B per device
+    # — everything else (heads/ff re-gathers) is smaller at this config.
+    # Order-of-magnitude headroom, but far below a partial-sum-sized
+    # rewrite; all-to-all at 0 is the real teeth for a non-MoE family.
+    budget = {"all-gather": 1 << 20, "all-to-all": 0}
+    S = sched.max_slots
+    decode_args = (
+        sched.params, session.pool, jnp.asarray(session.cur),
+        jnp.asarray(session.pos), jnp.asarray(session.active),
+        jnp.asarray(session.btables), jnp.asarray(session.keys),
+        jnp.asarray(session.steps), jnp.asarray(session.temps),
+    )
+    with shd.use_mesh(sched.mesh_ctx):
+        units = [compile_unit(
+            "decode_tp", sched._decode, decode_args, donate_argnums=(1,),
+            shard_divisors=(1, n_dev), collective_budget=budget,
+        )]
+        if sched._prefills:
+            bucket, width = sorted(
+                k for k in sched._prefills if isinstance(k, tuple)
+            )[0]
+            prefill_args = (
+                sched.params, session.pool,
+                jnp.zeros((width, bucket), jnp.int32),
+                jnp.zeros((width, sched.pages_per_slot), jnp.int32),
+                jnp.full((width,), S, jnp.int32),
+                jnp.zeros((width,), jnp.int32),
+                jnp.zeros((width,), jnp.int32),
+                jnp.zeros((width, 2), jnp.uint32),
+                jnp.zeros((width,), jnp.float32),
+            )
+            units.append(compile_unit(
+                f"prefill_tp[{bucket},{width}]",
+                sched._prefill_jit((bucket, width)), prefill_args,
+                donate_argnums=(1,), shard_divisors=(1, n_dev),
+                collective_budget=budget,
+            ))
+
+    return Built(compiled=units, replay=replay)

@@ -1,11 +1,22 @@
 """Test bootstrap: put ``src/`` on ``sys.path`` so bare
 ``python -m pytest`` works without the ``PYTHONPATH=src`` incantation,
 and fall back to the in-repo hypothesis shim when the real package is
-not installed (hermetic CI images)."""
+not installed (hermetic CI images).
+
+Also home of the shared multi-device subprocess harness
+(:func:`run_in_8dev_subprocess`): jax locks the device count at first
+initialization, so every forced-N-device test must run its payload in a
+fresh interpreter with ``XLA_FLAGS`` set before the jax import.
+"""
+import json
 import os
+import subprocess
 import sys
 
-_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_SRC = os.path.join(_ROOT, "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
 
@@ -17,3 +28,42 @@ except ModuleNotFoundError as e:
     from repro._compat import minihypothesis
 
     minihypothesis.install()
+
+
+def run_in_8dev_subprocess(snippet: str, timeout: int = 420,
+                           n_devices: int = 8):
+    """Run ``snippet`` in a fresh interpreter on a forced ``n_devices``
+    CPU host platform and return its JSON records.
+
+    The harness owns the boilerplate every multi-device test used to
+    copy: ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set in
+    the child's environment (before any jax import can lock the device
+    count), ``src/`` on the child's path, repo root as cwd, a nonzero-rc
+    assertion carrying the stderr tail, and parsing of every
+    ``{``-prefixed stdout line as one JSON record.  Snippets therefore
+    must NOT set XLA_FLAGS themselves (the env var wins) and report via
+    ``print(json.dumps({...}))``.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={int(n_devices)}"
+    )
+    env["PYTHONPATH"] = _SRC + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", snippet],
+        capture_output=True, text=True, env=env, cwd=_ROOT, timeout=timeout,
+    )
+    assert out.returncode == 0, (
+        f"8dev subprocess rc={out.returncode}\n"
+        f"--- stdout tail ---\n{out.stdout[-1000:]}\n"
+        f"--- stderr tail ---\n{out.stderr[-2000:]}"
+    )
+    return [json.loads(l) for l in out.stdout.splitlines()
+            if l.startswith("{")]
+
+
+@pytest.fixture(name="run_in_8dev_subprocess")
+def _run_in_8dev_subprocess_fixture():
+    return run_in_8dev_subprocess

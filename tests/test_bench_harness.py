@@ -1,0 +1,93 @@
+"""Regression tests for the benchmark subprocess-child harness
+(``benchmarks.common.run_child``).
+
+The hazard under test: benchmark drivers build their JSON record from
+child stdout, and before the shared helper a child that crashed AFTER
+printing partial output — or whose last line wasn't the record at all —
+could let ``--smoke`` CI re-publish last run's BENCH_*.json section
+looking current.  The helper must turn both cases into a loud failure.
+"""
+import pytest
+
+from benchmarks import common
+
+
+class TestRunChild:
+    def test_returns_last_line_record(self, capsys):
+        rec = common.run_child(
+            ["-c", "print('progress line'); "
+                   "print('{\"ok\": 1, \"n\": 2}')"]
+        )
+        assert rec == {"ok": 1, "n": 2}
+        # without echo, progress lines stay captured
+        assert "progress line" not in capsys.readouterr().out
+
+    def test_echo_forwards_progress_lines_not_record(self, capsys):
+        rec = common.run_child(
+            ["-c", "print('k1,12.5,'); print('{\"ok\": true}')"], echo=True
+        )
+        assert rec == {"ok": True}
+        out = capsys.readouterr().out
+        assert "k1,12.5," in out
+        assert '"ok"' not in out
+
+    def test_nonzero_exit_raises_even_with_valid_json(self):
+        """A child that prints a plausible record and THEN dies must not
+        have that record believed."""
+        with pytest.raises(RuntimeError, match=r"rc=3"):
+            common.run_child(
+                ["-c", "import sys; print('{\"ok\": 1}'); sys.exit(3)"],
+                label="crashy",
+            )
+
+    def test_error_carries_stderr_tail(self):
+        with pytest.raises(RuntimeError, match="boom-marker"):
+            common.run_child(
+                ["-c", "raise SystemExit('boom-marker')"]
+            )
+
+    def test_garbage_last_line_raises(self):
+        with pytest.raises(RuntimeError, match="no JSON record"):
+            common.run_child(["-c", "print('done in 3.2s')"])
+
+    def test_non_dict_json_last_line_raises(self):
+        # a bare list/number is not a benchmark record either
+        with pytest.raises(RuntimeError, match="no JSON record"):
+            common.run_child(["-c", "print('[1, 2]')"])
+
+    def test_empty_stdout_raises(self):
+        with pytest.raises(RuntimeError, match="no JSON record"):
+            common.run_child(["-c", "pass"])
+
+    def test_env_extra_reaches_child(self):
+        rec = common.run_child(
+            ["-c", "import os, json; "
+                   "print(json.dumps({'v': os.environ.get('BENCH_TEST_VAR'),"
+                   " 'pp': 'src' in os.environ['PYTHONPATH']}))"],
+            env_extra={"BENCH_TEST_VAR": "42"},
+        )
+        assert rec == {"v": "42", "pp": True}
+
+
+class TestDriversUseHarness:
+    """The drivers must route every child through the shared helper —
+    a local re-implementation would reintroduce the silent-stale hazard."""
+
+    def test_bench_serve_spawn_delegates(self):
+        from benchmarks import bench_serve
+
+        assert bench_serve.run_child is common.run_child
+
+    def test_bench_kernels_delegates(self):
+        from benchmarks import bench_kernels
+
+        assert bench_kernels.run_child is common.run_child
+
+    def test_bench_serve_sharded_child_forces_devices(self):
+        """The sharded child refuses to run without the forced-8-device
+        platform — guards against the parent dropping the XLA_FLAGS
+        env."""
+        argv = ["-m", "benchmarks.bench_serve", "--run-one", "sharded",
+                "--smoke"]
+        with pytest.raises(RuntimeError, match="expected 8 forced devices"):
+            common.run_child(argv, timeout=300)

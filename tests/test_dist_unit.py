@@ -1,11 +1,14 @@
 """Fast unit tests for ``repro.dist.sharding`` edge cases not covered by
 the seed spec in ``test_sharding_dist.py``: empty rules, 1-D params,
-rank-mismatch errors, context nesting, and the no-mesh ``shard_act``
-identity property."""
+rank-mismatch errors, context nesting, the no-mesh ``shard_act``
+identity property, and property-based checks of the resolution rules
+(``_divisible_prefix`` / ``axes_for`` / ``spec``) that now gate serving
+correctness, not just training layouts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding as shd
@@ -73,7 +76,9 @@ class TestSpecEdges:
         ctx = shd.MeshContext(_mesh2())
         s = ctx.sharding(("batch", None), (4, 4))
         assert isinstance(s, NamedSharding)
-        assert s.spec == P("data", None)
+        # trailing replicated dims are canonicalised away so device_put
+        # placements compare equal to jit-emitted output shardings
+        assert s.spec == P("data")
 
 
 class TestContext:
@@ -142,4 +147,86 @@ class TestParamRulesEdges:
         }
         out = shd.param_sharding_tree(tree, mesh)
         assert out["embed"]["w"].spec == P("model", "data")
-        assert out["ln"]["scale"].spec == P(None)
+        assert out["ln"]["scale"].spec == P()
+
+
+def _fake_ctx(sizes, rules):
+    """A MeshContext whose axis sizes are simulated (the host has one
+    device); resolution logic — _divisible_prefix / axes_for / spec — is
+    the REAL implementation."""
+    mesh = _mesh2() if set(sizes) <= {"data", "model"} else None
+    assert mesh is not None, sizes
+
+    class Fake(shd.MeshContext):
+        def __init__(self):
+            self.mesh = mesh
+            self.rules = dict(rules)
+            self.exact = False
+
+        def _axis_size(self, axis):
+            return sizes[axis]
+
+    return Fake()
+
+
+class TestResolutionProperties:
+    """Property-based invariants of the rule resolution that exact
+    sharded serving stands on."""
+
+    @given(d=st.integers(1, 16), m=st.integers(1, 16),
+           dim=st.integers(1, 4096))
+    @settings(max_examples=60, deadline=None)
+    def test_divisible_prefix_is_longest_and_divides(self, d, m, dim):
+        ctx = _fake_ctx({"data": d, "model": m}, {})
+        axes = ("data", "model")
+        got = ctx._divisible_prefix(axes, dim)
+        size = 1
+        for a in got:
+            size *= {"data": d, "model": m}[a]
+        assert dim % size == 0                      # result divides
+        if len(got) < len(axes):                    # and is the LONGEST
+            nxt = size * {"data": d, "model": m}[axes[len(got)]]
+            assert dim % nxt != 0
+
+    @given(m=st.integers(1, 16), dim=st.integers(1, 64))
+    @settings(max_examples=60, deadline=None)
+    def test_axes_for_divisibility_and_rule_miss(self, m, dim):
+        ctx = _fake_ctx({"data": 1, "model": m},
+                        {"heads": ("model",)})
+        got = ctx.axes_for("heads", dim)
+        if dim % m == 0:
+            assert got == ("model",)                # 1-sized axes divide all
+        else:
+            assert got is None                      # indivisible -> replicate
+        # rule miss and empty rule always replicate
+        assert ctx.axes_for("no_such_logical", dim) is None
+        ctx.rules["empty"] = ()
+        assert ctx.axes_for("empty", dim) is None
+
+    @given(d=st.integers(1, 8), m=st.integers(1, 8),
+           dims=st.tuples(st.integers(1, 64), st.integers(1, 64),
+                          st.integers(1, 64)),
+           names=st.tuples(st.sampled_from([None, "batch", "heads", "x"]),
+                           st.sampled_from([None, "batch", "heads", "x"]),
+                           st.sampled_from([None, "batch", "heads", "x"])))
+    @settings(max_examples=80, deadline=None)
+    def test_spec_never_reuses_axes_and_always_divides(self, d, m, dims,
+                                                       names):
+        sizes = {"data": d, "model": m}
+        ctx = _fake_ctx(sizes, {"batch": ("data",), "heads": ("model",)})
+        spec = ctx.spec(names, dims)
+        flat = []
+        for entry, dim in zip(tuple(spec), dims):
+            axes = () if entry is None else (
+                (entry,) if isinstance(entry, str) else tuple(entry)
+            )
+            size = 1
+            for a in axes:
+                size *= sizes[a]
+            assert dim % size == 0                  # every dim stays divisible
+            flat.extend(axes)
+        assert len(flat) == len(set(flat))          # each mesh axis used once
+        # unknown ("x") and None entries must be replicated
+        for entry, name in zip(tuple(spec), names):
+            if name in (None, "x"):
+                assert entry is None

@@ -445,9 +445,9 @@ class TestNoCrossRequestLeakage:
         poisoned = Scheduler(cfg, params, max_slots=2, max_len=32, page_size=8)
         real_init = lm.init_paged_pool
 
-        def poisoned_init(cfg_, n_slots, n_pages, page_size):
+        def poisoned_init(cfg_, n_slots, n_pages, page_size, **kw):
             import jax.numpy as jnp
-            pool = real_init(cfg_, n_slots, n_pages, page_size)
+            pool = real_init(cfg_, n_slots, n_pages, page_size, **kw)
             return jax.tree.map(lambda a: jnp.full_like(a, 1e9), pool)
 
         lm.init_paged_pool = poisoned_init

@@ -1,10 +1,7 @@
 """Distribution layer tests: logical-axis resolution, divisibility
-fallback, param rules, HLO analyzer, and (in a subprocess with 8 forced
-host devices) sharded train-step execution + compressed ring all-reduce."""
-import json
-import os
-import subprocess
-import sys
+fallback, param rules, HLO analyzer, and (via the shared
+``run_in_8dev_subprocess`` harness in conftest) sharded train-step
+execution + compressed ring all-reduce."""
 import textwrap
 
 import jax
@@ -170,8 +167,6 @@ class TestHloAnalyzer:
 
 
 SUBPROC_SNIPPET = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, json
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.dist import sharding as shd
@@ -216,21 +211,10 @@ print(json.dumps({"ring_median_rel": float(np.median(err)),
 
 
 @pytest.mark.slow
-def test_sharded_execution_8dev_subprocess():
+def test_sharded_execution_8dev_subprocess(run_in_8dev_subprocess):
     """Run a sharded train loss on a forced 8-device host platform and
     compare against the unsharded value; also checks the int8 ring
     all-reduce numerics on a real 8-way mesh."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    out = subprocess.run(
-        [sys.executable, "-c", SUBPROC_SNIPPET],
-        capture_output=True, text=True, env=env, cwd=os.path.dirname(
-            os.path.dirname(os.path.abspath(__file__))),
-        timeout=420,
-    )
-    assert out.returncode == 0, out.stderr[-2000:]
-    lines = [l for l in out.stdout.splitlines() if l.startswith("{")]
-    r1 = json.loads(lines[0])
+    r1, r2 = run_in_8dev_subprocess(SUBPROC_SNIPPET)
     assert r1["sharded"] == pytest.approx(r1["ref"], rel=2e-3)
-    r2 = json.loads(lines[1])
     assert r2["ring_median_rel"] < 0.02, r2
