@@ -40,8 +40,10 @@ fi
 if command -v mypy >/dev/null 2>&1; then
   mypy
 fi
-# Program-contract lint: donation/transfers/recompile/collectives/pallas
-# over every registered contract; hard gate (nonzero on any error).
+# Program-contract lint: donation/transfers/recompile/collectives/
+# pallas/precision over every registered contract; hard gate (nonzero
+# on any error finding, or when total wall time exceeds 2x the baseline
+# recorded in BENCH_lint.json).
 PYTHONPATH=src python -m repro.analysis.lint --all
 PYTHONPATH=src python -m benchmarks.bench_dse --smoke
 PYTHONPATH=src python -m benchmarks.bench_serve --smoke

@@ -2,7 +2,7 @@
 
 Hot programs declare :class:`~repro.analysis.registry.Contract` objects
 at their jit sites; pluggable checks (donation, transfers, recompile,
-collectives, pallas) verify them from artifacts alone.  See
+collectives, pallas, precision) verify them from artifacts alone.  See
 ``docs/analysis.md`` and ``python -m repro.analysis.lint --help``.
 
 This package root stays import-light: contract *declaration* must be
@@ -13,11 +13,14 @@ from .findings import Finding, Report  # noqa: F401
 from .registry import (  # noqa: F401
     CHECKS,
     CONTRACTS,
+    DEFAULT_ISLANDS,
     Built,
     CompiledUnit,
     Contract,
     ContractSkip,
+    ExactnessGate,
     PallasTrace,
+    PrecisionPolicy,
     Replay,
     register_check,
     register_contract,
@@ -29,6 +32,7 @@ _CHECK_MODULES = (
     "check_recompile",
     "check_collectives",
     "check_pallas",
+    "check_precision",
 )
 
 

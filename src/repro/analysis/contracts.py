@@ -26,6 +26,7 @@ CONTRACT_MODULES = (
     "repro.train.train_step",
     "repro.core.nsga2",
     "repro.kernels.ops",
+    "repro.sim.functional",
 )
 
 

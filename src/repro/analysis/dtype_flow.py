@@ -1,0 +1,272 @@
+"""Dtype-provenance dataflow analysis over jaxprs.
+
+One recursive walk assigns every variable of a (closed) jaxpr — through
+``convert_element_type``, ``dot_general``, ``scan``/``while``/``cond``/
+``pjit`` sub-jaxprs and ``pallas_call`` kernel bodies — a
+:class:`VarRecord`: its dtype, weak-type bit, a *provenance* string
+naming the unique site that produced it, and the precision islands
+(``models.common.precision_island`` named scopes) it was produced
+inside.  Provenance forms a DAG over sites (SSA jaxprs cannot cycle;
+the property tests assert it anyway), and because islands propagate
+both from an equation's own ``name_stack`` and from the enclosing call
+equation, a ``jax.jit``-ed helper traced inside an island inherits it.
+
+On top of the records the walk classifies the sites the ``precision``
+check consumes:
+
+* :class:`CastSite` — every ``convert_element_type``, tagged widening
+  when it moves a non-bool value into a strictly wider float;
+* :class:`DotSite` — every ``dot_general`` with operand/output dtypes
+  and its declared ``preferred_element_type`` accumulation;
+* :class:`CallSite` — every named call (``pjit``/``custom_jvp`` …), so
+  structural facts like "this dense routes through ``dcim_mvm``" are
+  readable from the trace;
+* :class:`ClipSite` — ``jnp.clip`` calls with literal bounds: the
+  quantizer's clip constants, from which ``B_x``/``B_w`` are recovered;
+* :class:`ConstSite` — scalar literals in mul/add/sub inside the
+  FP-DCIM pipeline (``fp_prealign``'s ``1 << B_M`` mantissa scale and
+  ``dcim_fp_matmul``'s exponent-bias offset), the FP analogue of the
+  clip-constant recovery.
+
+Everything here is pure introspection: nothing executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, FrozenSet, List, Optional, Tuple
+
+ISLAND_RE = re.compile(r"island:([A-Za-z0-9_.\-]+)")
+
+# pjit names whose scalar literals the FP bit-recovery needs.
+_FP_DCIM_FNS = ("fp_prealign", "dcim_fp_matmul")
+
+
+@dataclasses.dataclass(frozen=True)
+class VarRecord:
+    """Classification of one jaxpr variable (assigned exactly once)."""
+    dtype: str
+    weak: bool
+    provenance: str                 # unique producing-site id
+    islands: FrozenSet[str]         # islands the producer sits inside
+    deps: Tuple[str, ...]           # provenance of the producer's operands
+
+
+@dataclasses.dataclass(frozen=True)
+class CastSite:
+    path: str
+    src_dtype: str
+    dst_dtype: str
+    widening: bool
+    islands: FrozenSet[str]
+    fns: Tuple[str, ...]            # enclosing named-call chain
+
+
+@dataclasses.dataclass(frozen=True)
+class DotSite:
+    path: str
+    lhs_dtype: str
+    rhs_dtype: str
+    out_dtype: str
+    preferred: Optional[str]        # declared accumulation dtype, if any
+    islands: FrozenSet[str]
+    fns: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class CallSite:
+    path: str
+    name: str                       # pjit/custom-call name ("dcim_mvm", ...)
+    islands: FrozenSet[str]
+    fns: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClipSite:
+    path: str
+    lo: float
+    hi: float
+    islands: FrozenSet[str]
+    fns: Tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstSite:
+    path: str
+    primitive: str                  # mul | add | sub
+    value: float
+    islands: FrozenSet[str]
+    fns: Tuple[str, ...]
+
+
+@dataclasses.dataclass
+class Flow:
+    """Result of one :func:`analyze` walk."""
+    records: Dict[Any, VarRecord] = dataclasses.field(default_factory=dict)
+    casts: List[CastSite] = dataclasses.field(default_factory=list)
+    dots: List[DotSite] = dataclasses.field(default_factory=list)
+    calls: List[CallSite] = dataclasses.field(default_factory=list)
+    clips: List[ClipSite] = dataclasses.field(default_factory=list)
+    consts: List[ConstSite] = dataclasses.field(default_factory=list)
+    # every distinct dtype observed anywhere (vars and eqn outputs)
+    dtypes: Dict[str, str] = dataclasses.field(default_factory=dict)  # dtype -> first site
+    # top-level input avals, for the exactness-gate cross-check
+    invar_avals: List[Tuple[str, Tuple[int, ...]]] = dataclasses.field(
+        default_factory=list
+    )
+    n_eqns: int = 0
+
+    def provenance_graph(self) -> Dict[str, Tuple[str, ...]]:
+        """provenance -> dependency provenances, for acyclicity checks."""
+        graph: Dict[str, Tuple[str, ...]] = {}
+        for rec in self.records.values():
+            graph.setdefault(rec.provenance, rec.deps)
+        return graph
+
+
+def _dtype_of(var: Any) -> str:
+    return str(var.aval.dtype)
+
+
+def _is_float(dtype: str) -> bool:
+    return dtype.startswith(("float", "bfloat", "float8", "f8"))
+
+
+_ITEMSIZE = {
+    "bool": 1, "int8": 1, "uint8": 1, "int16": 2, "uint16": 2,
+    "int32": 4, "uint32": 4, "int64": 8, "uint64": 8,
+    "float8_e4m3fn": 1, "float8_e5m2": 1, "bfloat16": 2, "float16": 2,
+    "float32": 4, "float64": 8, "complex64": 8, "complex128": 16,
+}
+
+
+def itemsize(dtype: str) -> int:
+    return _ITEMSIZE.get(dtype, 4)
+
+
+def is_widening_cast(src: str, dst: str) -> bool:
+    """A silent precision promotion: a non-bool value converted into a
+    strictly wider *float*.  Narrowings are always fine (they can only
+    drop precision the program already had), int->same-width-float is
+    a value conversion, bool->float is predicate arithmetic."""
+    if src == "bool" or not _is_float(dst):
+        return False
+    return itemsize(dst) > itemsize(src)
+
+
+def _islands_of(stack_str: str, inherited: FrozenSet[str]) -> FrozenSet[str]:
+    found = ISLAND_RE.findall(stack_str)
+    return inherited | frozenset(found) if found else inherited
+
+
+def _literal_value(v: Any) -> Optional[float]:
+    """Scalar value of a Literal invar, else None."""
+    val = getattr(v, "val", None)
+    if val is None or hasattr(v, "count"):        # Vars have .count
+        return None
+    try:
+        arr = val if not hasattr(val, "shape") else val
+        if getattr(arr, "shape", ()) not in ((), (1,)):
+            return None
+        return float(arr)
+    except (TypeError, ValueError):
+        return None
+
+
+def _sub_jaxprs(params: Dict[str, Any]):
+    """(sub_jaxpr, n_consts_hint) for every nested jaxpr in eqn params."""
+    for val in params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for item in vals:
+            sub = getattr(item, "jaxpr", item)
+            if hasattr(sub, "eqns"):
+                yield sub
+
+
+def analyze(closed_jaxpr: Any) -> Flow:
+    """Walk a (closed) jaxpr and classify every variable and site."""
+    flow = Flow()
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    for i, v in enumerate(jaxpr.invars):
+        rec = VarRecord(_dtype_of(v), bool(getattr(v.aval, "weak_type", False)),
+                        f"invar:{i}", frozenset(), ())
+        flow.records[v] = rec
+        flow.dtypes.setdefault(rec.dtype, rec.provenance)
+        shape = tuple(int(d) for d in getattr(v.aval, "shape", ()))
+        flow.invar_avals.append((rec.dtype, shape))
+    _walk(jaxpr, "", frozenset(), (), flow)
+    return flow
+
+
+def _bind_invars(jaxpr: Any, path: str, islands: FrozenSet[str],
+                 deps: Tuple[str, ...], flow: Flow) -> None:
+    allvars = list(getattr(jaxpr, "constvars", ())) + list(jaxpr.invars)
+    for i, v in enumerate(allvars):
+        if v in flow.records:       # pragma: no cover - jaxprs are SSA
+            continue
+        rec = VarRecord(_dtype_of(v), bool(getattr(v.aval, "weak_type", False)),
+                        f"{path}:in{i}", islands, deps)
+        flow.records[v] = rec
+        flow.dtypes.setdefault(rec.dtype, rec.provenance)
+
+
+def _walk(jaxpr: Any, path: str, inherited: FrozenSet[str],
+          fns: Tuple[str, ...], flow: Flow) -> None:
+    for cv in getattr(jaxpr, "constvars", ()):
+        if cv not in flow.records:
+            rec = VarRecord(_dtype_of(cv),
+                            bool(getattr(cv.aval, "weak_type", False)),
+                            f"{path}:const:{len(flow.records)}",
+                            inherited, ())
+            flow.records[cv] = rec
+            flow.dtypes.setdefault(rec.dtype, rec.provenance)
+    for i, eqn in enumerate(jaxpr.eqns):
+        flow.n_eqns += 1
+        site = f"{path}e{i}:{eqn.primitive.name}"
+        stack = str(getattr(eqn.source_info, "name_stack", "") or "")
+        islands = _islands_of(stack, inherited)
+        deps = tuple(
+            flow.records[v].provenance
+            for v in eqn.invars
+            if hasattr(v, "count") and v in flow.records
+        )
+        for ov in eqn.outvars:
+            rec = VarRecord(_dtype_of(ov),
+                            bool(getattr(ov.aval, "weak_type", False)),
+                            site, islands, deps)
+            flow.records[ov] = rec
+            flow.dtypes.setdefault(rec.dtype, rec.provenance)
+
+        prim = eqn.primitive.name
+        name = str(eqn.params.get("name", "")) if "name" in eqn.params else ""
+        if prim == "convert_element_type":
+            src = _dtype_of(eqn.invars[0])
+            dst = str(eqn.params["new_dtype"])
+            flow.casts.append(CastSite(
+                site, src, dst, is_widening_cast(src, dst), islands, fns))
+        elif prim == "dot_general":
+            pref = eqn.params.get("preferred_element_type")
+            flow.dots.append(DotSite(
+                site,
+                _dtype_of(eqn.invars[0]), _dtype_of(eqn.invars[1]),
+                _dtype_of(eqn.outvars[0]),
+                None if pref is None else str(pref), islands, fns))
+        elif prim in ("mul", "add", "sub") and any(
+            f in fns for f in _FP_DCIM_FNS
+        ):
+            for v in eqn.invars:
+                val = _literal_value(v)
+                if val is not None:
+                    flow.consts.append(ConstSite(site, prim, val, islands, fns))
+        if name:
+            flow.calls.append(CallSite(site, name, islands, fns))
+            if name == "clip" and len(eqn.invars) == 3:
+                lo = _literal_value(eqn.invars[1])
+                hi = _literal_value(eqn.invars[2])
+                if lo is not None and hi is not None:
+                    flow.clips.append(ClipSite(site, lo, hi, islands, fns))
+        sub_fns = fns + (name,) if name else fns
+        for sub in _sub_jaxprs(eqn.params):
+            sub_path = f"{site}/"
+            _bind_invars(sub, f"{site}", islands, deps, flow)
+            _walk(sub, sub_path, islands, sub_fns, flow)

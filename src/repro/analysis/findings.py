@@ -59,6 +59,9 @@ class Report:
     checks_executed: List[str] = dataclasses.field(default_factory=list)
     contracts_executed: List[str] = dataclasses.field(default_factory=list)
     backend: Optional[str] = None
+    # Wall-clock seconds per unit of work: "<contract>:build" for the
+    # contract build, "<contract>:<check>" for each check run on it.
+    timings: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def extend(self, findings: List[Finding]) -> None:
         self.findings.extend(findings)
@@ -80,5 +83,6 @@ class Report:
             "summary": self.summary(),
             "checks_executed": sorted(set(self.checks_executed)),
             "contracts_executed": sorted(set(self.contracts_executed)),
+            "timings": {k: round(v, 3) for k, v in sorted(self.timings.items())},
             "findings": [f.to_json() for f in self.findings],
         }

@@ -99,6 +99,20 @@ def compile_unit(
     )
 
 
+def pytree_leaf_specs(tree: Any) -> List[Tuple[str, str, Tuple[int, ...]]]:
+    """(path, dtype, shape) for every leaf of a pytree — the shape the
+    precision check's :class:`~.registry.ExactnessGate` expects for
+    ``pool_leaves``."""
+    out: List[Tuple[str, str, Tuple[int, ...]]] = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        av = _aval_of(leaf)
+        out.append((
+            jax.tree_util.keystr(path), str(av.dtype),
+            tuple(int(d) for d in av.shape),
+        ))
+    return out
+
+
 # ----------------------------- jaxpr walking -----------------------------
 
 

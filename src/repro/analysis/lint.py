@@ -59,6 +59,7 @@ def run_lint(
         selected = [c for c in contract.checks if c in want_checks]
         if not selected:
             continue
+        t_build = time.perf_counter()
         try:
             built = contract.build()
         except ContractSkip as e:
@@ -72,17 +73,71 @@ def run_lint(
                 "contract", name, "error",
                 f"contract build failed: {type(e).__name__}: {e}"))
             continue
+        finally:
+            report.timings[f"{name}:build"] = time.perf_counter() - t_build
         report.contracts_executed.append(name)
         for check in selected:
+            t_check = time.perf_counter()
             try:
                 found = CHECKS[check](name, built)
             except Exception as e:
                 found = [Finding(
                     check, name, "error",
                     f"check crashed: {type(e).__name__}: {e}")]
+            report.timings[f"{name}:{check}"] = time.perf_counter() - t_check
             report.checks_executed.append(check)
             report.extend(found)
     return report
+
+
+BENCH_PATH = "BENCH_lint.json"    # repo root, committed like BENCH_dse.json
+BUDGET_FACTOR = 2.0
+
+
+def check_runtime_budget(
+    report: Report, wall_s: float, bench_path: str = BENCH_PATH,
+    record: bool = True,
+) -> Optional[str]:
+    """Compare a full run's wall time to the recorded baseline.
+
+    First full run records ``bench_path``; later runs fail (return an
+    error string) when total wall time exceeds ``BUDGET_FACTOR`` x the
+    baseline — a regression guard on the lint suite itself, so a new
+    check or contract cannot silently double CI time.  Returns None when
+    within budget.
+    """
+    bench = pathlib.Path(bench_path)
+    if not bench.exists():
+        if record:
+            bench.parent.mkdir(parents=True, exist_ok=True)
+            bench.write_text(json.dumps({
+                "total_wall_s": round(wall_s, 2),
+                "timings": {k: round(v, 3)
+                            for k, v in sorted(report.timings.items())},
+            }, indent=2, sort_keys=True) + "\n")
+        return None
+    baseline = float(json.loads(bench.read_text())["total_wall_s"])
+    budget = BUDGET_FACTOR * baseline
+    if wall_s > budget:
+        return (
+            f"lint runtime {wall_s:.1f}s exceeds budget {budget:.1f}s "
+            f"({BUDGET_FACTOR}x recorded baseline {baseline:.1f}s in "
+            f"{bench_path}); speed the suite up or re-record the baseline"
+        )
+    return None
+
+
+def _print_timings(report: Report, wall_s: float) -> None:
+    per_contract: dict = {}
+    for key, secs in report.timings.items():
+        contract, _, _phase = key.partition(":")
+        per_contract[contract] = per_contract.get(contract, 0.0) + secs
+    print("runtime per contract (build + checks):")
+    for contract, secs in sorted(
+        per_contract.items(), key=lambda kv: -kv[1]
+    ):
+        print(f"  {secs:7.2f}s  {contract}")
+    print(f"  {wall_s:7.2f}s  total wall")
 
 
 def main(argv: Optional[List[str]] = None) -> int:
@@ -119,14 +174,25 @@ def main(argv: Optional[List[str]] = None) -> int:
     report = run_lint(
         checks=args.check or None, contracts=args.contract or None
     )
+    wall_s = time.time() - t0
     payload = report.to_json()
-    payload["wall_s"] = round(time.time() - t0, 2)
+    payload["wall_s"] = round(wall_s, 2)
     out = pathlib.Path(args.out)
     out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
 
     for f in report.findings:
         print(f"[{f.severity:7s}] {f.check}/{f.contract}: {f.message}")
+    _print_timings(report, wall_s)
+
+    # The runtime budget is only meaningful for the full suite — partial
+    # runs neither record nor enforce the baseline.
+    over_budget = None
+    if args.all:
+        over_budget = check_runtime_budget(report, wall_s)
+        if over_budget:
+            print(f"[error  ] runtime/budget: {over_budget}")
+
     summary = report.summary()
     print(
         f"lint: {len(report.findings)} finding(s) "
@@ -136,7 +202,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         f"{len(set(report.checks_executed))} distinct check(s); "
         f"report -> {out}"
     )
-    return 0 if report.ok else 1
+    return 0 if (report.ok and over_budget is None) else 1
 
 
 if __name__ == "__main__":

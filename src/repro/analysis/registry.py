@@ -77,6 +77,62 @@ class PallasTrace:
 
 
 @dataclasses.dataclass
+class ExactnessGate:
+    """One lossless-context gate claim, re-verified from trace artifacts.
+
+    The scheduler enables prefix reuse / preemption / chunked prefill
+    only when ``cache_dtype == compute_dtype`` (reused pages must carry
+    the exact values a reference prefill would attend).  Instead of
+    trusting that config comparison, the precision check re-derives the
+    condition from the ACTUAL page-pool leaves of the traced program:
+    ``pool_leaves`` records (path, dtype, shape) of the very pool pytree
+    the contract traced ``program`` with, and every leaf must both match
+    an input aval of that traced program and be at compute precision
+    whenever ``enabled`` claims the gate is on."""
+    name: str                       # e.g. "prefix_reuse"
+    enabled: bool                   # what the scheduler/config claims
+    program: str                    # label in Built.hot_jaxprs to verify against
+    # (pytree path, dtype str, shape) for every pool leaf handed to the trace
+    pool_leaves: List[Tuple[str, str, Tuple[int, ...]]] = dataclasses.field(
+        default_factory=list
+    )
+
+
+# Islands every policy allows by default: the deliberate f32 regions of
+# the model stack (norm/rope/attention-softmax/logits/cross-entropy),
+# the declared-f32-accumulation dense block, the optimizer's f32 moment
+# arithmetic, and the DCIM quantize->MVM->dequantize pipeline.
+DEFAULT_ISLANDS: Tuple[str, ...] = (
+    "norm", "rope", "attn", "logits", "xent", "dense", "optimizer", "dcim",
+)
+
+
+@dataclasses.dataclass
+class PrecisionPolicy:
+    """Per-contract precision contract for the ``precision`` check.
+
+    ``compute_dtype`` is the working dtype of the hot programs;
+    ``accum_dtype`` the declared matmul accumulation dtype (every
+    accumulation-ambiguous ``dot_general`` must carry it as
+    ``preferred_element_type``).  Widening casts are only legal inside a
+    declared island (``models.common.precision_island``) listed in
+    ``islands``.  ``dcim_programs`` maps a ``hot_jaxprs`` label to the
+    ``core.precision`` format name whose DCIM numerics must provably
+    serve every dense MVM of that program."""
+    compute_dtype: str                              # e.g. "bfloat16"
+    accum_dtype: str = "float32"
+    islands: Tuple[str, ...] = DEFAULT_ISLANDS
+    forbid_dtypes: Tuple[str, ...] = ("float64", "complex128")
+    audit_widening: bool = True     # kernels opt out: register upcasts are idiomatic
+    audit_dots: bool = True
+    # hot_jaxprs label -> precision name ("int8", "fp8", ...) routed via
+    # sim.dcim_numerics; the program must contain zero raw fp dense
+    # dot_generals and its clip/prealign constants must recover B_x/B_w.
+    dcim_programs: Dict[str, str] = dataclasses.field(default_factory=dict)
+    gates: List[ExactnessGate] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
 class Built:
     """Everything a contract hands to the checks."""
     compiled: List[CompiledUnit] = dataclasses.field(default_factory=list)
@@ -86,6 +142,7 @@ class Built:
     hot_jaxprs: List[Tuple[str, Any]] = dataclasses.field(default_factory=list)
     replay: Optional[Replay] = None
     pallas: List[PallasTrace] = dataclasses.field(default_factory=list)
+    precision: Optional[PrecisionPolicy] = None
 
 
 @dataclasses.dataclass

@@ -334,14 +334,17 @@ from repro.analysis.registry import Built, Replay, register_contract  # noqa: E4
 
 @register_contract(
     "nsga2.run_batched",
-    checks=("recompile", "transfers"),
+    checks=("recompile", "transfers", "precision"),
     description="batched DSE at a tiny budget: two scenario tables with "
                 "equal shapes but different contents must share ONE "
-                "compiled program (scenario params are traced data), and "
-                "the host pipeline must transfer only explicitly",
+                "compiled program (scenario params are traced data), "
+                "the host pipeline must transfer only explicitly, and "
+                "the traced evolve program must hold f32 discipline "
+                "(no f64 from python-float scenario params)",
 )
 def _build_nsga2_contract() -> Built:
     from repro.analysis.jaxpr_tools import canonical_signature
+    from repro.analysis.registry import PrecisionPolicy
 
     cfg = NSGA2Config(pop_size=16, generations=4)
     t1 = ScenarioTable.from_specs([("int8", 16384), ("int4", 16384)])
@@ -370,4 +373,12 @@ def _build_nsga2_contract() -> Built:
     def hot():
         return run_batched(t1, cfg)
 
-    return Built(hot=hot, hot_label="run_batched pipeline", replay=replay)
+    keys1 = jnp.broadcast_to(key, (len(t1),) + key.shape)
+    evolve_jaxpr = jax.make_jaxpr(
+        lambda t, k: _run_batched_jit(t, cfg, k)
+    )(jax.tree.map(jnp.asarray, t1), keys1)
+    return Built(
+        hot=hot, hot_label="run_batched pipeline", replay=replay,
+        hot_jaxprs=[("run_batched", evolve_jaxpr)],
+        precision=PrecisionPolicy(compute_dtype="float32"),
+    )

@@ -311,10 +311,14 @@ from repro.analysis.registry import Built, PallasTrace, register_contract
 
 @register_contract(
     "kernels.pallas",
-    checks=("pallas",),
+    checks=("pallas", "precision"),
     description="every Pallas kernel traced at representative shapes: "
                 "BlockSpec lane/sublane tiling, grid coverage of the "
-                "padded arrays, interpreter-fallback accounting",
+                "padded arrays, interpreter-fallback accounting, and "
+                "kernel-level precision hygiene (no f64, integer/low-"
+                "precision dots declare their accumulator; register "
+                "upcasts inside kernels are idiomatic, so the widening "
+                "audit is off)",
 )
 def _build_kernels_contract() -> Built:
     from repro.kernels.pareto_rank import dominance_matrix_pallas
@@ -411,4 +415,8 @@ def _build_kernels_contract() -> Built:
         interpret_fallback=fallback,
     ))
 
-    return Built(pallas=traces)
+    from repro.analysis.registry import PrecisionPolicy
+
+    return Built(pallas=traces, precision=PrecisionPolicy(
+        compute_dtype="float32", audit_widening=False,
+    ))

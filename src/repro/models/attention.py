@@ -30,6 +30,7 @@ NEG_INF = -1e30
 
 
 # =============================== chunked flash ===============================
+@common.in_island("attn")
 def flash_attention(
     q: jnp.ndarray,            # (B, Sq, H, hd)
     k: jnp.ndarray,            # (B, Sk, Hk, hd)
@@ -138,6 +139,7 @@ def flash_attention(
     return out[:, :Sq]
 
 
+@common.in_island("attn")
 def decode_attention(
     q: jnp.ndarray,            # (B, 1, H, hd)
     k_cache: jnp.ndarray,      # (B, S_max, Hk, hd)
@@ -167,6 +169,7 @@ def decode_attention(
     return o.reshape(B, 1, H, hdv)
 
 
+@common.in_island("attn")
 def prefix_attention(
     q: jnp.ndarray,            # (B, T, H, hd) tail queries
     k_all: jnp.ndarray,        # (B, L + T, Hk, hd)  [ctx pages ; tail]
@@ -336,8 +339,9 @@ def gqa_apply_prefix(p, x, cfg, cache, block_table, ctx_len, wr_pg, wr_rw,
     B, T, _ = x.shape
     q, k, v = gqa_qkv(p, x, cfg, ctx_len[:, None])
     if use_context:
-        k_ctx = _gather_pages(cache["k"], block_table).astype(k.dtype)
-        v_ctx = _gather_pages(cache["v"], block_table).astype(v.dtype)
+        with common.precision_island("attn"):
+            k_ctx = _gather_pages(cache["k"], block_table).astype(k.dtype)
+            v_ctx = _gather_pages(cache["v"], block_table).astype(v.dtype)
     else:
         k_ctx = v_ctx = None
     o = kops.prefix_prefill(
@@ -438,6 +442,7 @@ def _mla_absorb_weights(p, cfg):
     return w_kv_b[:, :, : m.qk_nope_dim], w_kv_b[:, :, m.qk_nope_dim:]
 
 
+@common.in_island("attn")
 def _mla_absorb_q(p, cfg, q_nope):
     """Absorb ``w_uk`` into the nope queries: returns the (B, q, H, r)
     f32 absorbed queries, the post-sum score scale, and ``w_uv`` for the
@@ -451,6 +456,7 @@ def _mla_absorb_q(p, cfg, q_nope):
     return q_abs, scale, w_uv
 
 
+@common.in_island("attn")
 def mla_attend_core(q_abs, q_rope, ckv, krope, pos, scale):
     """The absorbed-MLA masked attend over contiguous cache views:
     scores and context computed in the compressed c_kv space.  ``pos``
@@ -474,6 +480,7 @@ def mla_attend_core(q_abs, q_rope, ckv, krope, pos, scale):
     return jnp.einsum("bhqs,bsr->bqhr", pattn, ckv.astype(jnp.float32))
 
 
+@common.in_island("attn")
 def _mla_absorbed_attend(p, cfg, q_nope, q_rope, ckv, krope, pos):
     """One absorbed-MLA decode attention against a contiguous
     (B, S, r_kv)/(B, S, d_rope) cache view: absorb, attend, up-project."""
@@ -526,7 +533,8 @@ def mla_apply_decode_paged(p, x, cfg, cache, block_table, pos):
         q_abs, q_rope, ckv_pages, kr_pages, block_table, pos, scale,
         backend=cfg.attn_backend,
     )
-    o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+    with common.precision_island("attn"):
+        o = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
     y = dense(p["wo"], repl_act(o).reshape(B, 1, -1).astype(x.dtype))
     return y, {"c_kv": ckv_pages, "k_rope": kr_pages}
 
@@ -548,8 +556,13 @@ def mla_apply_prefix(p, x, cfg, cache, block_table, ctx_len, wr_pg, wr_rw,
     c_kv, k_rope = _mla_ckv(p, x, cfg, ctx_len[:, None])
 
     if use_context:
-        ckv_ctx = _gather_pages(cache["c_kv"], block_table).astype(c_kv.dtype)
-        kr_ctx = _gather_pages(cache["k_rope"], block_table).astype(k_rope.dtype)
+        with common.precision_island("attn"):
+            ckv_ctx = _gather_pages(
+                cache["c_kv"], block_table
+            ).astype(c_kv.dtype)
+            kr_ctx = _gather_pages(
+                cache["k_rope"], block_table
+            ).astype(k_rope.dtype)
         L = ckv_ctx.shape[1]
         c_all = jnp.concatenate([ckv_ctx, c_kv], axis=1)     # (B, L+T, rkv)
         kr_all = jnp.concatenate([kr_ctx, k_rope], axis=1)   # (B, L+T, dr)

@@ -226,14 +226,19 @@ def embed_inputs(params, batch: Dict[str, Any], cfg: LMConfig, offset=0):
 
 
 def _head_logits(params, h, cfg: LMConfig):
-    if cfg.tie_embeddings:
-        logits = h @ params["embed"]["w"].astype(h.dtype).T
-    else:
-        logits = dense(params["head"], h)
-    # Exact serving gathers vocab-sharded logits so argmax/categorical
-    # sampling runs fully replicated (identical reduction order and RNG
-    # bits on every device); no-op outside an exact mesh context.
-    return repl_act(logits)
+    with common.precision_island("logits"):
+        if cfg.tie_embeddings:
+            w = params["embed"]["w"]
+            w = w if w.dtype == h.dtype else w.astype(h.dtype)
+            logits = jnp.matmul(
+                h, w.T, preferred_element_type=jnp.float32
+            ).astype(h.dtype)
+        else:
+            logits = dense(params["head"], h)
+        # Exact serving gathers vocab-sharded logits so argmax/categorical
+        # sampling runs fully replicated (identical reduction order and RNG
+        # bits on every device); no-op outside an exact mesh context.
+        return repl_act(logits)
 
 
 # ------------------------------- forward --------------------------------------
@@ -274,9 +279,13 @@ def loss_fn(params, batch: Dict[str, Any], cfg: LMConfig):
 
     targets = batch["targets"]
     mask = batch.get("loss_mask")
+
+    def logits32(hh):
+        with common.precision_island("logits"):
+            return _head_logits(params, hh, cfg).astype(jnp.float32)
+
     loss = common.softmax_xent_chunked(
-        lambda hh: _head_logits(params, hh, cfg).astype(jnp.float32),
-        h, targets, mask, cfg.loss_chunk,
+        logits32, h, targets, mask, cfg.loss_chunk,
     )
     metrics = {"ce": loss, "aux": aux}
     loss = loss + cfg.aux_loss_weight * aux
@@ -293,8 +302,7 @@ def loss_fn(params, batch: Dict[str, Any], cfg: LMConfig):
         t2 = targets[:, 1:]
         m2 = None if mask is None else mask[:, 1:]
         mtp_loss = common.softmax_xent_chunked(
-            lambda hh: _head_logits(params, hh, cfg).astype(jnp.float32),
-            z, t2, m2, cfg.loss_chunk,
+            logits32, z, t2, m2, cfg.loss_chunk,
         )
         metrics["mtp"] = mtp_loss
         loss = loss + cfg.mtp_weight * mtp_loss
@@ -590,14 +598,18 @@ from repro.analysis.registry import Built, register_contract  # noqa: E402
 
 @register_contract(
     "lm.prefill_paged",
-    checks=("donation", "transfers"),
+    checks=("donation", "transfers", "precision"),
     description="batched paged prefill at a smoke config: the donated "
-                "pool must alias in the compiled module, and a pool-"
-                "rebinding call must run clean under a transfer guard",
+                "pool must alias in the compiled module, a pool-"
+                "rebinding call must run clean under a transfer guard, "
+                "and the traced program must satisfy the f32 precision "
+                "policy (no f64, declared dot accumulation, widening "
+                "only inside islands)",
 )
 def _build_prefill_paged_contract() -> Built:
     from repro import configs
     from repro.analysis.jaxpr_tools import compile_unit
+    from repro.analysis.registry import PrecisionPolicy
 
     cfg = configs.get_smoke_config("qwen2.5-3b")
     params = init(jax.random.PRNGKey(0), cfg)
@@ -635,4 +647,9 @@ def _build_prefill_paged_contract() -> Built:
         state["pool"] = new_pool
         return jax.block_until_ready(logits)
 
-    return Built(compiled=[unit], hot=hot, hot_label="prefill_paged call")
+    prefill_jaxpr = jax.make_jaxpr(entry)(params, pool, *call_args)
+    return Built(
+        compiled=[unit], hot=hot, hot_label="prefill_paged call",
+        hot_jaxprs=[("prefill_paged", prefill_jaxpr)],
+        precision=PrecisionPolicy(compute_dtype=cfg.compute_dtype),
+    )

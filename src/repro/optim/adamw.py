@@ -13,6 +13,8 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.models import common
+
 
 class Transform(NamedTuple):
     init: Callable[[Any], Any]
@@ -64,6 +66,7 @@ def adamw(
         step = state["step"] + 1
         lr_t = lr_fn(step)
 
+        @common.in_island("optimizer")
         def one(g, s, p):
             g = g.astype(jnp.float32)
             if quantize_moments:
@@ -96,5 +99,8 @@ def adamw(
 
 
 def apply_updates(params, updates):
-    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
-                        params, updates)
+    with common.precision_island("optimizer"):
+        return jax.tree.map(
+            lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+            params, updates,
+        )

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import lm
+from repro.models import common, lm
 from repro.models.config import LMConfig
 
 
@@ -113,19 +113,22 @@ def sample_tokens(logits, keys, steps, temperature):
     categorically at ``fold_in(key, step)``.  Both branches are computed
     and selected with ``where`` so temperature stays *traced* — mixed
     greedy/sampled slot pools run in one compiled program."""
-    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    t = jnp.broadcast_to(
-        jnp.asarray(temperature, jnp.float32), greedy.shape
-    )
+    with common.precision_island("logits"):
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t = jnp.broadcast_to(
+            jnp.asarray(temperature, jnp.float32), greedy.shape
+        )
 
-    def one(key, step, row, tt):
-        k = jax.random.fold_in(key, step)
-        return jax.random.categorical(
-            k, row.astype(jnp.float32) / jnp.maximum(tt, 1e-6)
-        ).astype(jnp.int32)
+        def one(key, step, row, tt):
+            k = jax.random.fold_in(key, step)
+            return jax.random.categorical(
+                k, row.astype(jnp.float32) / jnp.maximum(tt, 1e-6)
+            ).astype(jnp.int32)
 
-    sampled = jax.vmap(one)(keys, jnp.asarray(steps, jnp.int32), logits, t)
-    return jnp.where(t > 0.0, sampled, greedy)
+        sampled = jax.vmap(one)(
+            keys, jnp.asarray(steps, jnp.int32), logits, t
+        )
+        return jnp.where(t > 0.0, sampled, greedy)
 
 
 @dataclasses.dataclass

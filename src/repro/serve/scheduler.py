@@ -1689,23 +1689,32 @@ class Scheduler:
 # ------------------------------ lint contract --------------------------------
 @register_contract(
     "serve.scheduler",
-    checks=("donation", "transfers", "recompile"),
+    checks=("donation", "transfers", "recompile", "precision"),
     description="paged continuous-batching serve loop at a smoke config "
                 "with the concurrent multi-tenant driver features on "
                 "(priorities, preemption, chunked prefill, bounded queue): "
                 "the pool donation must alias, the ServeSession.step() hot "
-                "path must not transfer implicitly, and a replayed mixed "
+                "path must not transfer implicitly, a replayed mixed "
                 "trace must stay within the one-decode + "
-                "one-prefill-per-(bucket,width) compile budget",
+                "one-prefill-per-(bucket,width) compile budget, and the "
+                "traced decode/prefill programs must satisfy the "
+                "precision policy — including the exactness gates "
+                "re-derived from the actual pool leaf dtypes",
 )
 def _build_serve_contract() -> Built:
     from repro import configs
     from repro.analysis.jaxpr_tools import (
         canonical_signature,
         compile_unit,
+        pytree_leaf_specs,
     )
+    from repro.analysis.registry import ExactnessGate, PrecisionPolicy
 
+    # Lossless cache (cache_dtype == compute_dtype): the exactness gates
+    # — prefix reuse, preemption-resume, chunked prefill — are ON, and
+    # the precision check re-derives that from the traced pool leaves.
     cfg = configs.get_smoke_config("qwen2.5-3b")
+    cfg = dataclasses.replace(cfg, cache_dtype=cfg.compute_dtype)
     params = lm.init(jax.random.PRNGKey(0), cfg)
     # Multi-tenant knobs ON: the replayed trace exercises priority
     # admission, chunked prefill and the preemption path through the
@@ -1806,19 +1815,39 @@ def _build_serve_contract() -> Built:
     decode_jaxpr = jax.make_jaxpr(
         partial(_decode_paged_fn, cfg=cfg)
     )(*decode_args)
+    hot_jaxprs = [("decode", decode_jaxpr)]
+    pool_leaves = pytree_leaf_specs(session.pool)
+    gates = [
+        ExactnessGate("prefix_reuse", sched.prefix_reuse_active,
+                      "decode", pool_leaves),
+        ExactnessGate("preempt", sched.preempt_active, "decode",
+                      pool_leaves),
+    ]
+    if sched._prefills:
+        prefill_jaxpr = jax.make_jaxpr(partial(
+            _burst_prefill_fn, cfg=cfg, page_size=sched.page_size,
+            use_context=sched._use_context,
+        ))(params, session.pool, *prefill_args[2:])
+        hot_jaxprs.append(("prefill", prefill_jaxpr))
+        gates.append(ExactnessGate(
+            "chunked_prefill", sched.chunk_active, "prefill", pool_leaves
+        ))
 
     return Built(
         compiled=units,
         hot=hot,
         hot_label="ServeSession.step()",
-        hot_jaxprs=[("decode", decode_jaxpr)],
+        hot_jaxprs=hot_jaxprs,
         replay=replay,
+        precision=PrecisionPolicy(
+            compute_dtype=cfg.compute_dtype, gates=gates
+        ),
     )
 
 
 @register_contract(
     "serve.scheduler_tp",
-    checks=("donation", "recompile", "collectives"),
+    checks=("donation", "recompile", "collectives", "precision"),
     description="tensor-parallel paged serve loop on a tp=<n_devices> "
                 "('model',) mesh at a smoke config: the sharded pool "
                 "donation must still alias, a replayed trace must stay "
@@ -1829,8 +1858,16 @@ def _build_serve_contract() -> Built:
                 "serving has no partial-sum collectives to reshuffle)",
 )
 def _build_serve_tp_contract() -> Built:
-    from repro.analysis.jaxpr_tools import canonical_signature, compile_unit
-    from repro.analysis.registry import ContractSkip
+    from repro.analysis.jaxpr_tools import (
+        canonical_signature,
+        compile_unit,
+        pytree_leaf_specs,
+    )
+    from repro.analysis.registry import (
+        ContractSkip,
+        ExactnessGate,
+        PrecisionPolicy,
+    )
     from repro import configs
 
     n_dev = jax.device_count()
@@ -1925,5 +1962,21 @@ def _build_serve_tp_contract() -> Built:
                 donate_argnums=(1,), shard_divisors=(1, n_dev),
                 collective_budget=budget,
             ))
+        decode_jaxpr = jax.make_jaxpr(
+            partial(_decode_paged_fn, cfg=cfg)
+        )(*decode_args)
 
-    return Built(compiled=units, replay=replay)
+    # Stock smoke config: lossy bf16 cache under f32 compute, so the
+    # exactness gates must come out DISABLED — the precision check
+    # re-derives that from the traced pool leaves.
+    gates = [
+        ExactnessGate("prefix_reuse", sched.prefix_reuse_active,
+                      "decode_tp", pytree_leaf_specs(session.pool)),
+    ]
+    return Built(
+        compiled=units, replay=replay,
+        hot_jaxprs=[("decode_tp", decode_jaxpr)],
+        precision=PrecisionPolicy(
+            compute_dtype=cfg.compute_dtype, gates=gates
+        ),
+    )

@@ -17,7 +17,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
-from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -30,11 +29,18 @@ from repro.kernels import ops
 
 
 def quantize_sym(x, bits: int):
-    """Per-tensor symmetric quantization -> (int32 codes, scale)."""
+    """Per-tensor symmetric quantization -> (int32 codes, scale).
+
+    The clip range is symmetric ([-qmax, qmax], NOT the two's-complement
+    [-qmax-1, qmax]): the scale is ``amax / qmax``, so the ``-qmax-1``
+    code would dequantize to ``-amax * (qmax+1)/qmax`` — outside the
+    representable range the scale promises.  The precision lint recovers
+    the bit width from these clip constants and rejects asymmetric
+    bounds."""
     amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
     qmax = 2 ** (bits - 1) - 1
     scale = amax / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
     return q, scale
 
 
@@ -135,3 +141,110 @@ def dcim_numerics(sim: DCIMMacroSim):
         yield sim
     finally:
         _common.set_mvm_impl(prev)
+
+
+# ------------------------------ lint contract --------------------------------
+from repro.analysis.registry import (  # noqa: E402
+    Built,
+    ExactnessGate,
+    PrecisionPolicy,
+    register_contract,
+)
+
+
+@register_contract(
+    "sim.dcim_serve",
+    checks=("precision",),
+    description="dcim_sim-routed serve programs traced at int8 and fp8 "
+                "under a bf16 lossless-cache config: every dense MVM "
+                "must provably route through the quantize->dcim_mvm/"
+                "dcim_fp_matmul pipeline (zero raw fp dots in the dense "
+                "island), the quantizer clip / pre-align constants must "
+                "recover the core.precision bit widths, and the "
+                "exactness gates must re-derive from the bf16 pool "
+                "leaves",
+)
+def _build_dcim_serve_contract() -> Built:
+    import dataclasses as _dc
+    from functools import partial
+
+    import jax
+
+    from repro import configs
+    from repro.analysis.jaxpr_tools import pytree_leaf_specs
+    from repro.models import lm
+    from repro.serve.scheduler import _burst_prefill_fn, _decode_paged_fn
+
+    # bf16 compute with a bf16 (lossless, cache == compute) pool: the
+    # gates claim enabled and the precision check re-derives that.
+    cfg = configs.get_smoke_config("qwen2.5-3b")
+    cfg = _dc.replace(
+        cfg, param_dtype="bfloat16", compute_dtype="bfloat16",
+        cache_dtype="bfloat16",
+    )
+    params = lm.init(jax.random.PRNGKey(0), cfg)
+    S, page_size, pages_per_slot = 2, 8, 4
+    pool = lm.init_paged_pool(
+        cfg, S, S * pages_per_slot + 1, page_size
+    )
+    B, T = 2, 8
+    decode_args = (
+        params, pool,
+        jnp.zeros((S,), jnp.int32), jnp.zeros((S,), jnp.int32),
+        jnp.zeros((S,), jnp.bool_),
+        jnp.zeros((S, pages_per_slot), jnp.int32),
+        jnp.zeros((S, 2), jnp.uint32), jnp.zeros((S,), jnp.int32),
+        jnp.zeros((S,), jnp.float32),
+    )
+    prefill_args = (
+        params, pool,
+        jnp.zeros((B, T), jnp.int32),
+        jnp.zeros((B, pages_per_slot), jnp.int32),
+        jnp.asarray([0, 1], jnp.int32),
+        jnp.zeros((B,), jnp.int32),
+        jnp.full((B,), T, jnp.int32),
+        jnp.zeros((B, 2), jnp.uint32),
+        jnp.zeros((B,), jnp.float32),
+    )
+
+    # One integer and one FP design point, macro dims matching the model
+    # widths (fp group height 16 divides every reduction dim here).
+    sims = {
+        "int8": DCIMMacroSim(
+            precision=get_precision("int8"), N=64, H=64, L=4, k=4
+        ),
+        "fp8": DCIMMacroSim(
+            precision=get_precision("fp8"), N=64, H=16, L=4, k=4
+        ),
+    }
+    hot_jaxprs = []
+    dcim_programs = {}
+    for name, sim in sims.items():
+        with dcim_numerics(sim):
+            decode_jaxpr = jax.make_jaxpr(
+                partial(_decode_paged_fn, cfg=cfg)
+            )(*decode_args)
+            prefill_jaxpr = jax.make_jaxpr(partial(
+                _burst_prefill_fn, cfg=cfg, page_size=page_size,
+                use_context=True,
+            ))(*prefill_args)
+        hot_jaxprs += [
+            (f"decode_{name}", decode_jaxpr),
+            (f"prefill_{name}", prefill_jaxpr),
+        ]
+        dcim_programs[f"decode_{name}"] = name
+        dcim_programs[f"prefill_{name}"] = name
+
+    pool_leaves = pytree_leaf_specs(pool)
+    gates = [
+        ExactnessGate("prefix_reuse", True, "prefill_int8", pool_leaves),
+        ExactnessGate("preempt", True, "decode_int8", pool_leaves),
+    ]
+    return Built(
+        hot_jaxprs=hot_jaxprs,
+        precision=PrecisionPolicy(
+            compute_dtype=cfg.compute_dtype,
+            dcim_programs=dcim_programs,
+            gates=gates,
+        ),
+    )

@@ -11,7 +11,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.models import lm
+from repro.models import common, lm
 from repro.models.config import LMConfig
 from repro.optim import get_optimizer
 from repro.optim.adamw import Transform, apply_updates
@@ -57,13 +57,15 @@ def make_train_step(
             grads = td.unflatten([o[0] for o in outs])
             new_err = td.unflatten([o[1] for o in outs])
 
-        # Global-norm clipping.
-        gnorm = jnp.sqrt(
-            sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                for g in jax.tree.leaves(grads))
-        )
-        scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
-        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        # Global-norm clipping (f32 accumulation over bf16 grads — part
+        # of the optimizer's declared f32 island).
+        with common.precision_island("optimizer"):
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads))
+            )
+            scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
 
         updates, new_opt = opt.update(grads, state["opt"], state["params"])
         new_params = apply_updates(state["params"], updates)
@@ -94,18 +96,32 @@ from repro.analysis.registry import Built, Replay, register_contract
 
 @register_contract(
     "train.train_step",
-    checks=("donation", "transfers", "recompile"),
-    description="jitted train step at a smoke config: the donated "
-                "TrainState must alias output state leaf-for-leaf, "
-                "repeated same-shape steps must not retrace, and the "
-                "state-rebinding loop must run clean under a transfer "
-                "guard",
+    checks=("donation", "transfers", "recompile", "precision"),
+    description="jitted train step at a smoke config with bf16 "
+                "params/compute: the donated TrainState must alias "
+                "output state leaf-for-leaf, repeated same-shape steps "
+                "must not retrace, the state-rebinding loop must run "
+                "clean under a transfer guard, and the traced step must "
+                "satisfy the bf16 policy — f32 only inside the declared "
+                "islands (norm/rope/attn/logits/xent and the optimizer's "
+                "f32 moments), every low-precision dot accumulating at "
+                "f32",
 )
 def _build_train_step_contract() -> Built:
+    import dataclasses
+
     from repro import configs
     from repro.analysis.jaxpr_tools import canonical_signature, compile_unit
+    from repro.analysis.registry import PrecisionPolicy
 
+    # bf16 params + compute (the production mixed-precision recipe: f32
+    # optimizer moments over bf16 weights) — this is the config the
+    # widening audit has teeth at, since every f32 region must then be a
+    # declared island.
     cfg = configs.get_smoke_config("qwen2.5-3b")
+    cfg = dataclasses.replace(
+        cfg, param_dtype="bfloat16", compute_dtype="bfloat16",
+    )
     opt = get_optimizer("adamw", 1e-3)
     state = init_state(jax.random.PRNGKey(0), cfg, opt)
     step = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
@@ -149,6 +165,11 @@ def _build_train_step_contract() -> Built:
         holder["state"] = new_state
         return jax.block_until_ready(metrics["loss"])
 
+    step_jaxpr = jax.make_jaxpr(make_train_step(cfg, opt))(
+        holder["state"], hot_batch
+    )
     return Built(
-        compiled=[unit], hot=hot, hot_label="train_step call", replay=replay
+        compiled=[unit], hot=hot, hot_label="train_step call", replay=replay,
+        hot_jaxprs=[("train_step", step_jaxpr)],
+        precision=PrecisionPolicy(compute_dtype=cfg.compute_dtype),
     )

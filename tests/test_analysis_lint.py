@@ -14,6 +14,7 @@ from repro.analysis.registry import (
     Built,
     CompiledUnit,
     PallasTrace,
+    PrecisionPolicy,
     Replay,
 )
 from repro.analysis.jaxpr_tools import (
@@ -226,6 +227,187 @@ def test_pallas_clean_repo_kernels():
     report = run_lint(checks=["pallas"], contracts=["kernels.pallas"])
     assert report.ok, [f.message for f in report.findings]
     assert "kernels.pallas" in report.contracts_executed
+
+
+# --------------------------- precision ---------------------------------------
+def _precision(built):
+    return CHECKS["precision"]("fixture", built)
+
+
+def test_precision_hidden_f64_fixture():
+    # x64 enabled during tracing: a single f64 constant promotes the
+    # whole chain — the forbidden-dtype rule must name the dtype.
+    with jax.experimental.enable_x64():
+        jaxpr = jax.make_jaxpr(
+            lambda x: x * np.float64(2.0)
+        )(jnp.zeros(4, jnp.float64))
+    built = Built(hot_jaxprs=[("f64", jaxpr)],
+                  precision=PrecisionPolicy(compute_dtype="float32"))
+    errs = _errors(_precision(built))
+    assert any("float64" in e.message for e in errs)
+
+
+def test_precision_widening_needs_island_fixture():
+    from repro.models import common
+
+    def bad(x):
+        return x.astype(jnp.float32).sum()
+
+    def good(x):
+        with common.precision_island("logits"):
+            return x.astype(jnp.float32).sum()
+
+    x = jnp.zeros(4, jnp.bfloat16)
+    policy = PrecisionPolicy(compute_dtype="bfloat16")
+    errs = _errors(_precision(Built(
+        hot_jaxprs=[("p", jax.make_jaxpr(bad)(x))], precision=policy)))
+    assert len(errs) == 1 and "widening cast" in errs[0].message
+    assert not _errors(_precision(Built(
+        hot_jaxprs=[("p", jax.make_jaxpr(good)(x))], precision=policy)))
+
+
+def test_precision_dot_accumulation_fixture():
+    x = jnp.zeros((4, 8), jnp.bfloat16)
+    w = jnp.zeros((8, 2), jnp.bfloat16)
+    policy = PrecisionPolicy(compute_dtype="bfloat16")
+    bad = jax.make_jaxpr(lambda a, b: jax.lax.dot(a, b))(x, w)
+    errs = _errors(_precision(Built(
+        hot_jaxprs=[("p", bad)], precision=policy)))
+    assert len(errs) == 1
+    assert "preferred_element_type=float32" in errs[0].message
+    good = jax.make_jaxpr(lambda a, b: jnp.matmul(
+        a, b, preferred_element_type=jnp.float32))(x, w)
+    assert not _errors(_precision(Built(
+        hot_jaxprs=[("p", good)], precision=policy)))
+
+
+def test_precision_dcim_bypassed_dense_fixture():
+    # A raw float matmul inside the dense island while the policy says
+    # this program routes through the DCIM sim: structural bypass.
+    from repro.models import common
+
+    def bypass(x, w):
+        with common.precision_island("dense"):
+            return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+    jaxpr = jax.make_jaxpr(bypass)(
+        jnp.zeros((4, 8), jnp.float32), jnp.zeros((8, 2), jnp.float32))
+    built = Built(
+        hot_jaxprs=[("decode", jaxpr)],
+        precision=PrecisionPolicy(
+            compute_dtype="float32", dcim_programs={"decode": "int8"}),
+    )
+    errs = _errors(_precision(built))
+    assert any("bypasses the installed DCIM numerics" in e.message
+               for e in errs)
+    assert any("never calls" in e.message for e in errs)
+
+
+def test_precision_asymmetric_clip_fixture():
+    # The historical quantizer bug: clip to [-qmax-1, qmax] while the
+    # scale is amax/qmax.  B-recovery from the clip constants flags it.
+    from repro.kernels import ops
+    from repro.models import common
+
+    def bad_mvm(x, w):
+        with common.precision_island("dense"):
+            qmax = 127
+            sx = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+            sw = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / qmax
+            qx = jnp.clip(jnp.round(x / sx), -qmax - 1, qmax)
+            qw = jnp.clip(jnp.round(w / sw), -qmax, qmax)
+            y = ops.dcim_mvm(qx.astype(jnp.int32), qw.astype(jnp.int32),
+                             B_x=8, B_w=8, k=4)
+            return y.astype(jnp.float32) * (sx * sw)
+
+    jaxpr = jax.make_jaxpr(bad_mvm)(
+        jnp.zeros((4, 8), jnp.float32), jnp.zeros((8, 4), jnp.float32))
+    built = Built(
+        hot_jaxprs=[("decode", jaxpr)],
+        precision=PrecisionPolicy(
+            compute_dtype="float32", dcim_programs={"decode": "int8"}),
+    )
+    errs = _errors(_precision(built))
+    assert any("asymmetric quantizer clip [-128.0, 127.0]" in e.message
+               for e in errs)
+    # The symmetric clip still recovers B=8 — only the bad one errors.
+    assert not any("recovers bit widths" in e.message for e in errs)
+
+
+def test_precision_gate_lossy_and_unmatched_fixture():
+    # The gate re-derives from traced pool leaves, not config flags: a
+    # bf16 pool behind an enabled gate under f32 compute must error, as
+    # must a leaf the program never takes as input.
+    from repro.analysis.jaxpr_tools import pytree_leaf_specs
+    from repro.analysis.registry import ExactnessGate
+
+    pool = {"k": jnp.zeros((2, 4), jnp.bfloat16),
+            "v": jnp.zeros((2, 4), jnp.bfloat16)}
+    jaxpr = jax.make_jaxpr(
+        lambda p, x: (p["k"].sum(), p["v"].sum(), x)
+    )(pool, jnp.zeros((), jnp.float32))
+    leaves = pytree_leaf_specs(pool)
+    built = Built(
+        hot_jaxprs=[("decode", jaxpr)],
+        precision=PrecisionPolicy(
+            compute_dtype="float32", audit_widening=False,
+            gates=[
+                ExactnessGate("prefix_reuse", True, "decode", leaves),
+                ExactnessGate("preempt", True, "decode",
+                              [("['missing']", "float32", (9, 9))]),
+                ExactnessGate("orphan", True, "never_traced", leaves),
+            ]),
+    )
+    errs = _errors(_precision(built))
+    assert any("claimed ENABLED" in e.message and "lossy" in e.message
+               for e in errs)
+    assert any("not an input of the traced" in e.message for e in errs)
+    assert any("did not trace" in e.message for e in errs)
+
+
+def test_precision_gate_verified_fixture():
+    from repro.analysis.jaxpr_tools import pytree_leaf_specs
+    from repro.analysis.registry import ExactnessGate
+
+    pool = {"k": jnp.zeros((2, 4), jnp.float32)}
+    jaxpr = jax.make_jaxpr(lambda p: p["k"].sum())(pool)
+    built = Built(
+        hot_jaxprs=[("decode", jaxpr)],
+        precision=PrecisionPolicy(
+            compute_dtype="float32",
+            gates=[ExactnessGate("prefix_reuse", True, "decode",
+                                 pytree_leaf_specs(pool))]),
+    )
+    findings = _precision(built)
+    assert not _errors(findings)
+    assert any("verified" in f.message for f in findings)
+
+
+def test_precision_clean_repo_contracts():
+    # The dcim-serve contract must lint clean end-to-end AND positively
+    # verify the routing (info findings, not silence).
+    from repro.analysis.lint import run_lint
+
+    report = run_lint(checks=["precision"], contracts=["sim.dcim_serve"])
+    assert report.ok, [f.message for f in report.findings]
+    msgs = [f.message for f in report.findings]
+    assert any("DCIM int routing verified" in m for m in msgs)
+    assert any("DCIM fp routing verified" in m for m in msgs)
+
+
+def test_lint_runtime_budget(tmp_path):
+    from repro.analysis.findings import Report
+    from repro.analysis.lint import check_runtime_budget
+
+    bench = tmp_path / "BENCH_lint.json"
+    r = Report(timings={"c:build": 1.0})
+    # First run records the baseline ...
+    assert check_runtime_budget(r, 10.0, str(bench)) is None
+    assert bench.exists()
+    # ... within 2x passes, beyond 2x fails.
+    assert check_runtime_budget(r, 19.0, str(bench)) is None
+    msg = check_runtime_budget(r, 21.0, str(bench))
+    assert msg is not None and "exceeds budget" in msg
 
 
 # --------------------------- fp8 byte accounting (satellite) ------------------

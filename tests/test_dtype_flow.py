@@ -1,0 +1,177 @@
+"""Property tests for the dtype-provenance walk (analysis.dtype_flow).
+
+Synthetic jaxprs — random cast chains, nested islands, scan/cond
+sub-jaxprs — drive the structural invariants the precision check relies
+on: provenance forms a DAG, every variable is classified exactly once,
+and an island annotation masks exactly the subtree traced inside it
+(including jitted helpers, whose sub-jaxpr name stacks are relative and
+must inherit the enclosing islands).
+"""
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import dtype_flow
+from repro.models import common
+
+_DTYPES = ("float32", "bfloat16", "float16", "int32", "float32")
+
+
+def _all_vars(jaxpr, acc=None):
+    """Every Var reachable in a jaxpr, including sub-jaxpr binders."""
+    acc = set() if acc is None else acc
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    acc.update(jaxpr.constvars)
+    acc.update(jaxpr.invars)
+    for eqn in jaxpr.eqns:
+        acc.update(eqn.outvars)
+        for sub in dtype_flow._sub_jaxprs(eqn.params):
+            _all_vars(sub, acc)
+    return acc
+
+
+def _assert_acyclic(graph):
+    state = {}                       # node -> 1 (on stack) | 2 (done)
+    for root in graph:
+        stack = [(root, iter(graph.get(root, ())))]
+        if state.get(root):
+            continue
+        state[root] = 1
+        while stack:
+            node, it = stack[-1]
+            dep = next(it, None)
+            if dep is None:
+                state[node] = 2
+                stack.pop()
+                continue
+            mark = state.get(dep)
+            assert mark != 1, f"provenance cycle through {dep}"
+            if mark is None:
+                state[dep] = 1
+                stack.append((dep, iter(graph.get(dep, ()))))
+
+
+def _chain_flow(dtypes):
+    def prog(x):
+        h = x
+        with common.precision_island("outer"):
+            for i, d in enumerate(dtypes):
+                with common.precision_island(f"inner{i}"):
+                    h = h.astype(d)
+        return h
+
+    jaxpr = jax.make_jaxpr(prog)(jnp.zeros((4,), jnp.float32))
+    return jaxpr, dtype_flow.analyze(jaxpr)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dtypes=st.lists(st.sampled_from(_DTYPES), min_size=1, max_size=6))
+def test_chain_provenance_acyclic_and_complete(dtypes):
+    jaxpr, flow = _chain_flow(dtypes)
+    _assert_acyclic(flow.provenance_graph())
+    # Every variable classified, and exactly once: the record map's keys
+    # are precisely the variables the jaxpr binds anywhere.
+    assert set(flow.records) == _all_vars(jaxpr)
+    # Each realized dtype in the chain was observed by the walk.
+    for d in dtypes:
+        assert d in flow.dtypes
+
+
+@settings(max_examples=25, deadline=None)
+@given(dtypes=st.lists(st.sampled_from(_DTYPES), min_size=1, max_size=6))
+def test_island_masks_exactly_its_subtree(dtypes):
+    _, flow = _chain_flow(dtypes)
+    # A cast eqn exists exactly where the chain's dtype changes; its
+    # islands must be {outer, inner<i>} for that step and nothing else.
+    prev = "float32"
+    expected = set()
+    for i, d in enumerate(dtypes):
+        if d != prev:
+            expected.add(f"inner{i}")
+        prev = d
+    seen = set()
+    for cast in flow.casts:
+        assert "outer" in cast.islands
+        inner = {n for n in cast.islands if n.startswith("inner")}
+        assert len(inner) == 1, cast
+        seen |= inner
+    assert seen == expected
+
+
+def test_jitted_helper_inherits_enclosing_island():
+    # Sub-jaxpr name stacks are relative: a helper traced inside an
+    # island must still be attributed to it through the pjit boundary.
+    @jax.jit
+    def helper(v):
+        return v.astype(jnp.float32)
+
+    def prog(x):
+        with common.precision_island("norm"):
+            y = helper(x)
+        z = x.astype(jnp.float32)        # identical cast, outside
+        return y + z
+
+    flow = dtype_flow.analyze(
+        jax.make_jaxpr(prog)(jnp.zeros((4,), jnp.bfloat16))
+    )
+    widening = [c for c in flow.casts if c.widening]
+    assert {frozenset(c.islands) for c in widening} == {
+        frozenset({"norm"}), frozenset()
+    }
+    inside = next(c for c in widening if c.islands)
+    assert "helper" in inside.fns
+
+
+def test_scan_and_cond_subjaxprs_fully_classified():
+    def prog(x, flag):
+        def body(carry, _):
+            c = carry.astype(jnp.float32) * 2.0
+            return c.astype(x.dtype), c.sum()
+
+        h, ys = jax.lax.scan(body, x, None, length=3)
+        out = jax.lax.cond(
+            flag, lambda v: v.astype(jnp.float32).sum(),
+            lambda v: jnp.zeros((), jnp.float32), h
+        )
+        return out, ys
+
+    jaxpr = jax.make_jaxpr(prog)(
+        jnp.zeros((4,), jnp.bfloat16), jnp.asarray(True)
+    )
+    flow = dtype_flow.analyze(jaxpr)
+    assert set(flow.records) == _all_vars(jaxpr)
+    _assert_acyclic(flow.provenance_graph())
+    # The widening casts live inside scan/cond sub-jaxprs; the walk must
+    # have descended to see them.
+    assert any(c.widening for c in flow.casts)
+    assert flow.n_eqns > len(jaxpr.jaxpr.eqns)
+
+
+@given(
+    src=st.sampled_from(sorted(dtype_flow._ITEMSIZE)),
+    dst=st.sampled_from(sorted(dtype_flow._ITEMSIZE)),
+)
+def test_widening_rule_reference(src, dst):
+    expect = (
+        src != "bool"
+        and dst.startswith(("float", "bfloat"))
+        and dtype_flow.itemsize(dst) > dtype_flow.itemsize(src)
+    )
+    assert dtype_flow.is_widening_cast(src, dst) == expect
+
+
+def test_dot_and_clip_sites_recovered():
+    def prog(x, w):
+        with common.precision_island("dense"):
+            q = jnp.clip(jnp.round(x * 4.0), -127, 127)
+            y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+        return y + q.sum()
+
+    flow = dtype_flow.analyze(jax.make_jaxpr(prog)(
+        jnp.zeros((4, 8), jnp.float32), jnp.zeros((8, 2), jnp.float32)
+    ))
+    (dot,) = flow.dots
+    assert dot.preferred == "float32" and "dense" in dot.islands
+    (clip,) = flow.clips
+    assert (clip.lo, clip.hi) == (-127.0, 127.0)
+    assert "dense" in clip.islands
